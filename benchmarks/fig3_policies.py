@@ -1,0 +1,80 @@
+"""Paper Fig. 3: all scheduling-policy columns on the three test beds.
+
+Columns reproduced (labels as in the paper):
+  refs       : static worksharing with serial / round-robin / first-touch
+  omp_task   : plain tasking {s, s-1} x {ijk, kji}
+  omp_lq     : locality queues {s, s-1} x {ijk, kji}
+  tbb        : parallel_for {p, n-p} x {a, n-a}
+  tbb_lq     : TBB locality queues {p, n-p}
+
+Emits CSV: system,column,label,median_mlups,q25,q75,local_frac,steal_frac
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (SMALL_GRID, PAPER_GRID, TESTBED, OpenMPLocalityQueues,
+                        OpenMPTasking, StaticWorksharing, TBBLocalityQueues,
+                        TBBParallelFor, place, run_samples, summarize,
+                        tbb_first_touch)
+
+
+def run(grid=SMALL_GRID, samples: int = 5, seed0: int = 0):
+    rows = []
+    for name, topo in TESTBED.items():
+        # reference lines
+        for pl, label in [("serial", "ref_serial"),
+                          ("round_robin", "ref_round_robin"),
+                          ("static", "ref_first_touch")]:
+            homes = place(pl, grid, topo)
+            s = summarize(run_samples(grid, topo, StaticWorksharing, homes,
+                                      n_samples=max(samples // 2, 2),
+                                      seed0=seed0))
+            rows.append((name, "refs", label, s))
+        # OpenMP tasking / locality queues
+        for col, mk in [("omp_task", OpenMPTasking),
+                        ("omp_lq", OpenMPLocalityQueues)]:
+            for init, init_lbl in [("static", "s"), ("static1", "s-1")]:
+                for order in ("ijk", "kji"):
+                    homes = place(init, grid, topo)
+                    s = summarize(run_samples(
+                        grid, topo, lambda m=mk, o=order: m(submit_order=o),
+                        homes, n_samples=samples, seed0=seed0))
+                    rows.append((name, col, f"{init_lbl}/{order}", s))
+        # TBB
+        for pinned, p_lbl in [(True, "p"), (False, "n-p")]:
+            for aff, a_lbl in [(True, "a"), (False, "n-a")]:
+                def mk_tbb(a=aff, s0=seed0):
+                    return None
+                # fresh dynamic first-touch per sample set
+                rng = np.random.default_rng(seed0 + 17)
+                homes, threads = tbb_first_touch(grid, topo, rng)
+                s = summarize(run_samples(
+                    grid, topo,
+                    lambda a=aff, t=threads: TBBParallelFor(affinity=a, replay=t),
+                    homes, n_samples=samples, pinned=pinned, seed0=seed0))
+                rows.append((name, "tbb", f"{p_lbl}/{a_lbl}", s))
+            rng = np.random.default_rng(seed0 + 17)
+            homes, _ = tbb_first_touch(grid, topo, rng)
+            s = summarize(run_samples(grid, topo, TBBLocalityQueues, homes,
+                                      n_samples=samples, pinned=pinned,
+                                      seed0=seed0))
+            rows.append((name, "tbb_lq", p_lbl, s))
+    return rows
+
+
+def main(grid=SMALL_GRID, samples: int = 5) -> list[str]:
+    lines = ["system,column,label,median_mlups,q25,q75,local_frac,steal_frac"]
+    for name, col, label, s in run(grid, samples):
+        lines.append(f"{name},{col},{label},{s['median_mlups']:.0f},"
+                     f"{s['q25']:.0f},{s['q75']:.0f},"
+                     f"{s['local_fraction']:.3f},{s['steal_fraction']:.3f}")
+    return lines
+
+
+if __name__ == "__main__":
+    import sys
+    full = "--full" in sys.argv
+    for line in main(grid=PAPER_GRID if full else SMALL_GRID,
+                     samples=15 if full else 5):
+        print(line)

@@ -1,0 +1,46 @@
+"""Paper Fig. 4: run-to-run performance variability (quantile bands).
+
+OpenMP tasking (left panel) and TBB parallel_for (right panel) across
+seeds; the paper's observation is that the spread is surprisingly small.
+Emits CSV: system,policy,median,q05,q25,q75,q95,rel_iqr
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (SMALL_GRID, PAPER_GRID, NEHALEM_EP, ISTANBUL,
+                        OpenMPLocalityQueues, OpenMPTasking, TBBParallelFor,
+                        place, run_samples, summarize, tbb_first_touch)
+
+
+def main(grid=SMALL_GRID, samples: int = 9) -> list[str]:
+    lines = ["system,policy,median,q05,q25,q75,q95,rel_iqr"]
+    for topo in (NEHALEM_EP, ISTANBUL):
+        cases = []
+        homes_s1 = place("static1", grid, topo)
+        cases.append(("omp_task_kji",
+                      lambda: OpenMPTasking(submit_order="kji"), homes_s1))
+        cases.append(("omp_lq_kji",
+                      lambda: OpenMPLocalityQueues(submit_order="kji"),
+                      homes_s1))
+        rng = np.random.default_rng(5)
+        homes_tbb, threads = tbb_first_touch(grid, topo, rng)
+        cases.append(("tbb_parallel_for",
+                      lambda t=threads: TBBParallelFor(affinity=False),
+                      homes_tbb))
+        for label, mk, homes in cases:
+            s = summarize(run_samples(grid, topo, mk, homes,
+                                      n_samples=samples))
+            rel_iqr = (s["q75"] - s["q25"]) / s["median_mlups"]
+            lines.append(f"{topo.name},{label},{s['median_mlups']:.0f},"
+                         f"{s['q05']:.0f},{s['q25']:.0f},{s['q75']:.0f},"
+                         f"{s['q95']:.0f},{rel_iqr:.4f}")
+    return lines
+
+
+if __name__ == "__main__":
+    import sys
+    full = "--full" in sys.argv
+    for line in main(grid=PAPER_GRID if full else SMALL_GRID,
+                     samples=100 if full else 9):
+        print(line)

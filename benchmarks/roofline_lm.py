@@ -1,0 +1,46 @@
+"""Roofline table for the 40 assigned (arch x shape) cells, read from the
+dry-run artifact (experiments/dryrun.json — regenerate with
+`python -m repro.launch.dryrun`).
+
+Emits CSV:
+arch,shape,mesh,status,bottleneck,t_compute_s,t_memory_s,t_collective_s,
+peak_gib_per_chip,useful_flops_ratio
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parent.parent / "experiments" / "dryrun.json"
+
+
+def main(mesh: str = "single") -> list[str]:
+    lines = ["arch,shape,mesh,status,bottleneck,t_compute_s,t_memory_s,"
+             "t_collective_s,peak_gib_per_chip,useful_flops_ratio"]
+    if not DRYRUN.exists():
+        lines.append("MISSING,run `python -m repro.launch.dryrun` first,,,,,,,,")
+        return lines
+    data = json.loads(DRYRUN.read_text())
+    for key in sorted(data):
+        arch, shape, m = key.split("|")
+        if m != mesh:
+            continue
+        v = data[key]
+        if v["status"] != "ok":
+            lines.append(f"{arch},{shape},{m},{v['status']},,,,,,")
+            continue
+        r = v["roofline"]
+        lines.append(
+            f"{arch},{shape},{m},ok,{r['bottleneck']},"
+            f"{r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
+            f"{r['t_collective_s']:.3e},"
+            f"{v['memory']['peak_estimate_per_chip']/2**30:.2f},"
+            f"{v['useful_flops_ratio']:.3f}")
+    return lines
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = "multi" if "--multi" in sys.argv else "single"
+    for line in main(mesh):
+        print(line)

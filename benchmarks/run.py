@@ -1,0 +1,83 @@
+"""Benchmark harness entry: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV summary lines plus each benchmark's
+own CSV block.  ``--full`` uses the paper's full 14400-task grid and 100
+samples (slow; the recorded numbers live in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _block(title: str, lines: list[str]) -> None:
+    print(f"\n# === {title} ===")
+    for ln in lines:
+        print(ln)
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    from repro.core import PAPER_GRID, SMALL_GRID
+    grid = PAPER_GRID if full else SMALL_GRID
+    summary = []
+
+    from benchmarks import fig3_policies
+    t0 = time.time()
+    lines = fig3_policies.main(grid=grid, samples=15 if full else 4)
+    dt = time.time() - t0
+    _block("Fig 3: scheduling policies x test beds (MLUPs)", lines)
+    lq = [l for l in lines if ",omp_lq,s-1/kji" in l]
+    ft = [l for l in lines if ",refs,ref_first_touch" in l]
+    ratio = (float(lq[0].split(",")[3]) / float(ft[0].split(",")[3])
+             if lq and ft else 0.0)
+    summary.append(("fig3_policies", dt * 1e6 / max(len(lines), 1),
+                    f"lq_vs_firsttouch={ratio:.3f}"))
+
+    from benchmarks import fig4_variability
+    t0 = time.time()
+    lines = fig4_variability.main(grid=grid, samples=100 if full else 7)
+    dt = time.time() - t0
+    _block("Fig 4: run-to-run variability", lines)
+    max_iqr = max(float(l.split(",")[-1]) for l in lines[1:])
+    summary.append(("fig4_variability", dt * 1e6 / max(len(lines), 1),
+                    f"max_rel_iqr={max_iqr:.4f}"))
+
+    from benchmarks import table1_stream
+    t0 = time.time()
+    lines = table1_stream.main()
+    dt = time.time() - t0
+    _block("Table 1: STREAM envelopes (model vs paper)", lines)
+    errs = [float(l.split(",")[4]) for l in lines[1:] if l.split(",")[4]]
+    summary.append(("table1_stream", dt * 1e6 / max(len(lines), 1),
+                    f"max_rel_err={max(errs):.3f}"))
+
+    from benchmarks import jacobi_weak_scaling
+    t0 = time.time()
+    lines = jacobi_weak_scaling.main(device_counts=(4, 8) if not full
+                                     else (4, 8, 16))
+    dt = time.time() - t0
+    _block("Jacobi distributed: locality vs scattered collective bytes", lines)
+    ratios = [float(l.split(",")[3]) for l in lines[1:]
+              if l.split(",")[1] == "scattered"]
+    summary.append(("jacobi_weak_scaling", dt * 1e6 / max(len(lines), 1),
+                    f"max_scatter_ratio={max(ratios) if ratios else 0:.1f}x"))
+
+    from benchmarks import roofline_lm
+    t0 = time.time()
+    lines = roofline_lm.main("single")
+    dt = time.time() - t0
+    _block("Roofline: 40 (arch x shape) cells, single-pod", lines)
+    ok = sum(1 for l in lines[1:] if ",ok," in l)
+    summary.append(("roofline_lm", dt * 1e6 / max(len(lines), 1),
+                    f"cells_ok={ok}"))
+
+    print("\n# === summary (name,us_per_call,derived) ===")
+    for name, us, derived in summary:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper Table 1: STREAM-copy bandwidth envelopes the cost model reproduces.
+
+Emits CSV: system,quantity,model_gbs,paper_gbs,rel_err
+"""
+from __future__ import annotations
+
+from repro.core import TESTBED, stream_sanity
+
+PAPER = {
+    "istanbul": {"full": 38.6, "socket": 9.9},
+    "nehalem_ep": {"full": 36.6, "socket": 18.9},
+    "nehalem_ex": {"full": 33.4, "socket": 8.15},
+}
+
+
+def main() -> list[str]:
+    lines = ["system,quantity,model_gbs,paper_gbs,rel_err"]
+    for name, topo in TESTBED.items():
+        s = stream_sanity(topo)
+        pairs = [("full_system", s["full_local_bw"], PAPER[name]["full"]),
+                 ("single_socket", s["serial_ld0_bw"], PAPER[name]["socket"])]
+        for qty, model, paper in pairs:
+            lines.append(f"{name},{qty},{model:.2f},{paper:.2f},"
+                         f"{abs(model-paper)/paper:.3f}")
+        lines.append(f"{name},interleaved,{s['interleaved_bw']:.2f},,")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,58 @@
+"""Serving scenario: the locality-queue request router vs naive policies.
+
+Multi-turn chat sessions have KV/prefix-cache affinity to the replica that
+served their first turn; the paper's router (local queue first, steal when
+idle) minimizes cache-miss re-prefills while keeping replicas busy.
+
+    PYTHONPATH=src python examples/serve_router.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.models.model import build_model
+from repro.serving.engine import Request, ServingEngine
+
+
+def workload(cfg, n=18, replicas=3, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        toks = rng.integers(0, cfg.vocab_size, size=int(rng.integers(8, 20)))
+        # 70% are follow-up turns with an existing cache home; skew the homes
+        # (replica 0 is hot) so stealing has something to balance
+        if rng.random() < 0.7:
+            home = int(rng.choice([0, 0, 1, 2]))
+        else:
+            home = -1
+        reqs.append(Request(uid=i, tokens=toks, max_new=6, home_replica=home))
+    return reqs
+
+
+def main():
+    cfg = reduce_config(get_config("qwen2-0.5b"))
+    model = build_model(cfg, max_pos=96)
+    params = model.init_params(jax.random.key(0))
+
+    print(f"{'policy':14s} {'local%':>7s} {'steals':>7s} {'prefill_toks':>13s}")
+    baseline = None
+    for policy in ("single_queue", "round_robin", "locality"):
+        eng = ServingEngine(model, params, num_replicas=3, max_seq=64,
+                            policy=policy)
+        for r in workload(cfg):
+            eng.submit(r)
+        done = eng.run_until_drained()
+        s = eng.stats
+        if baseline is None:
+            baseline = {r.uid: tuple(r.out_tokens) for r in done}
+        else:
+            assert baseline == {r.uid: tuple(r.out_tokens) for r in done}, \
+                "routing must not change results"
+        print(f"{policy:14s} {s.locality_fraction:7.0%} {s.stolen:7d} "
+              f"{s.prefill_tokens:13d}")
+    print("\nidentical outputs under every policy; locality routing "
+          "maximizes cache hits (local%), stealing keeps replicas busy.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""End-to-end driver: train a ~100M-parameter qwen2-family model for a few
+hundred steps on the synthetic corpus, with checkpointing and resume.
+
+This is the deliverable-(b) "real" driver: full config system, data
+pipeline, AdamW, async checkpoints.  On this CPU container it uses a
+~100M-parameter narrowed qwen2 (same code path as the full configs); on a
+TPU slice, drop --narrow to use the real qwen2-0.5b.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import make_batch_iterator
+from repro.models.model import build_model
+from repro.train.loop import LoopConfig, Trainer
+from repro.train.optimizer import AdamWConfig
+
+
+def narrow_100m(cfg):
+    """qwen2-0.5b narrowed to ~100M params (CPU-trainable)."""
+    return dataclasses.replace(
+        cfg, name="qwen2-100m", num_layers=6, d_model=512, num_heads=8,
+        num_kv_heads=2, head_dim=64, d_ff=2048, vocab_size=32768,
+        microbatches=1, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--narrow", action="store_true", default=True)
+    ap.add_argument("--ckpt", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config("qwen2-0.5b")
+    if args.narrow:
+        cfg = narrow_100m(cfg)
+    model = build_model(cfg, max_pos=args.seq)
+    n_params = cfg.num_params()
+    print(f"training {cfg.name}: ~{n_params/1e6:.0f}M params, "
+          f"{args.steps} steps x {args.batch}x{args.seq} tokens")
+
+    trainer = Trainer(
+        model, make_batch_iterator(cfg.vocab_size, args.seq, args.batch),
+        LoopConfig(total_steps=args.steps, checkpoint_every=100,
+                   checkpoint_dir=args.ckpt, log_every=20),
+        AdamWConfig(lr=1e-3, warmup_steps=30, total_steps=args.steps),
+    )
+    out = trainer.run()
+    losses = out["losses"]
+    k = max(len(losses) // 10, 1)
+    print(f"loss: first-{k} mean {sum(losses[:k])/k:.4f} -> "
+          f"last-{k} mean {sum(losses[-k:])/k:.4f}")
+
+
+if __name__ == "__main__":
+    main()

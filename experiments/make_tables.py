@@ -1,0 +1,47 @@
+"""Regenerate the EXPERIMENTS.md roofline tables from dryrun.json."""
+import json
+import sys
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+
+
+def fmt(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3 or x >= 1e4:
+        return f"{x:.2e}"
+    return f"{x:.3g}"
+
+
+def table(mesh: str) -> str:
+    data = json.loads((HERE / "dryrun.json").read_text())
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bottleneck "
+           "| peak GiB/chip | useful | note |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(data):
+        arch, shape, m = key.split("|")
+        if m != mesh:
+            continue
+        v = data[key]
+        if v["status"] == "skipped":
+            out.append(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                       f"skipped: {v['reason'][:60]} |")
+            continue
+        if v["status"] != "ok":
+            out.append(f"| {arch} | {shape} | — | — | — | ERROR | — | — | "
+                       f"{v.get('error','')[:50]} |")
+            continue
+        r = v["roofline"]
+        out.append(
+            f"| {arch} | {shape} | {fmt(r['t_compute_s'])} | "
+            f"{fmt(r['t_memory_s'])} | {fmt(r['t_collective_s'])} | "
+            f"**{r['bottleneck']}** | "
+            f"{v['memory']['peak_estimate_per_chip']/2**30:.2f} | "
+            f"{v['useful_flops_ratio']:.3f} | |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print(table(mesh))

@@ -1,0 +1,93 @@
+"""Pipeline parallelism over the pod axis (GPipe-style, shard_map + ppermute).
+
+The multi-pod mesh's "pod" axis is the slow (DCN) tier.  Data parallelism
+over pods all-reduces the full gradient across pods every step; pipelining
+instead keeps weight shards pod-local and moves only microbatch activations
+between stages — the paper's locality rule (keep bandwidth-hungry traffic
+inside the locality domain, let only the thin stream cross) applied to the
+parallelism layout itself.
+
+Implementation: the classic collective_permute pipeline. Layer stacks are
+sharded over the `pod` axis (stage s owns layers [s*L/P, (s+1)*L/P)); each
+of M microbatches flows stage-to-stage; the steady-state loop runs
+M + P - 1 ticks, each tick = one stage compute + one ppermute handoff.
+Bubble fraction = (P-1)/(M+P-1).
+
+`pipeline_wire_bytes` provides the napkin model used in §Perf to decide
+between DP-over-pods and PP-over-pods for a given arch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipelined_apply(layer_fn: Callable, stage_params, x_mb: jnp.ndarray,
+                    axis: str = "pod", gather_output: bool = True):
+    """Run M microbatches through P pipeline stages over mesh axis `axis`.
+
+    layer_fn(params_slice, x) -> x : one stage's computation (already
+      vmapped/scanned over the stage's own layers).
+    stage_params: stage-sharded params (leading axis = stage, sharded over
+      `axis` inside the enclosing shard_map).
+    x_mb: (M, mb, ...) microbatched inputs, replicated across stages.
+
+    Returns (M, mb, ...) outputs (valid on the LAST stage; other stages
+    hold garbage that the caller discards — standard GPipe SPMD form).
+    """
+    n_stage = jax.lax.axis_size(axis)
+    stage = jax.lax.axis_index(axis)
+    m = x_mb.shape[0]
+    ticks = m + n_stage - 1
+    fwd = [(i, (i + 1) % n_stage) for i in range(n_stage)]
+
+    def tick(carry, t):
+        state, outputs = carry          # state: (mb, ...) in-flight activation
+        # stage 0 injects microbatch t (if any remain); others use incoming
+        inject = jnp.where(t < m, t, m - 1)
+        x_in = jnp.where(stage == 0, x_mb[inject], state)
+        y = layer_fn(stage_params, x_in)
+        # last stage records finished microbatch (t - (P-1))
+        out_idx = t - (n_stage - 1)
+        record = (stage == n_stage - 1) & (out_idx >= 0)
+        outputs = jax.lax.cond(
+            record,
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, y, jnp.maximum(out_idx, 0), 0),
+            lambda o: o, outputs)
+        # hand activations to the next stage
+        state = jax.lax.ppermute(y, axis, fwd)
+        return (state, outputs), None
+
+    state0 = jnp.zeros_like(x_mb[0])
+    outputs0 = jnp.zeros_like(x_mb)
+    (_, outputs), _ = jax.lax.scan(tick, (state0, outputs0),
+                                   jnp.arange(ticks))
+    if gather_output:
+        # results exist only on the last stage (zeros elsewhere): a psum is
+        # exactly the broadcast-from-last-stage
+        outputs = jax.lax.psum(outputs, axis)
+    return outputs
+
+
+def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
+    return (num_stages - 1) / (num_microbatches + num_stages - 1)
+
+
+def pipeline_wire_bytes(param_bytes: float, act_bytes_per_mb: float,
+                        num_stages: int, num_microbatches: int) -> dict:
+    """Napkin model: inter-pod traffic per step, DP-over-pods vs PP-over-pods.
+
+    DP: 2x param_bytes gradient all-reduce across pods.
+    PP: one activation handoff per microbatch per stage boundary
+        (forward + backward), no cross-pod gradient traffic.
+    """
+    dp = 2.0 * param_bytes
+    pp = 2.0 * act_bytes_per_mb * num_microbatches * (num_stages - 1) / num_stages
+    return {"dp_bytes": dp, "pp_bytes": pp,
+            "pp_wins": pp < dp,
+            "bubble": bubble_fraction(num_stages, num_microbatches)}

@@ -1,0 +1,102 @@
+"""Logical-axis sharding rules -> NamedSharding, MaxText-style.
+
+Model code annotates activations/weights with *logical* axis names
+("batch", "seq", "heads", "ffn", "experts", ...); a ``ShardingRules`` table
+maps those to physical mesh axes.  Outside a mesh context every annotation
+is a no-op, so the same model code runs in CPU smoke tests and in the
+512-device dry-run.
+
+The rules encode the distribution strategy of DESIGN.md §6:
+  batch   -> (pod, data)      data parallelism (+ pod axis when multi-pod)
+  heads/ffn/experts/vocab -> model   tensor/expert parallelism
+  seq_q   -> model            sequence parallelism for attention when the
+                              head count does not divide the model axis
+  kv_seq  -> model            flash-decode style sequence-sharded KV caches
+  fsdp    -> data             weight sharding over the data axis (FSDP)
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    rules: dict[str, Optional[tuple[str, ...] | str]]
+
+    def spec(self, *logical: Optional[str]) -> P:
+        axes = []
+        for name in logical:
+            if name is None:
+                axes.append(None)
+                continue
+            phys = self.rules.get(name, None)
+            axes.append(phys)
+        return P(*axes)
+
+    def sharding(self, *logical: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+def make_rules(mesh: Mesh, fsdp: bool = False,
+               shard_heads: bool = True) -> ShardingRules:
+    """Build the rule table for a (pod?, data, model) mesh."""
+    axes = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    batch = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+    model = "model" if "model" in axes else None
+    rules: dict[str, Optional[tuple[str, ...] | str]] = {
+        "batch": batch,
+        "seq": None,                    # activations not seq-sharded by default
+        # sequence-parallel attention only when heads cannot shard (both map
+        # to the model axis, so exactly one of them may be active)
+        "seq_q": None if shard_heads else model,
+        "kv_seq": model,                # sequence-sharded KV cache (decode)
+        "heads": model if shard_heads else None,
+        "kv_heads": None,               # replicated (kv_heads < model axis)
+        "ffn": model,
+        "experts": model,
+        "vocab": model,
+        "lru": model,
+        "lru_blocks": model,
+        "qheads": model if shard_heads else None,
+        "rwkv_ffn": model,
+        "zero": ("data" if "data" in axes else None),
+        "embed": None,                  # d_model replicated on activations
+        "fsdp": ("data" if (fsdp and "data" in axes) else None),
+    }
+    return ShardingRules(mesh=mesh, rules=rules)
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate an intermediate with logical axes; no-op without rules."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    if x.ndim != len(logical):
+        raise ValueError(f"rank {x.ndim} vs logical {logical}")
+    return jax.lax.with_sharding_constraint(x, rules.sharding(*logical))

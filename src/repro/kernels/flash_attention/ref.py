@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal, windowed)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+            causal: bool = True, window: int = 0,
+            q_offset: int = 0) -> jnp.ndarray:
+    """q (B, Hq, Tq, hd); k, v (B, Hkv, Tk, hd) -> (B, Hq, Tq, hd).
+
+    GQA: q head h attends to kv head h // (Hq // Hkv).
+    """
+    b, hq, tq, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, tq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, kf) * (hd ** -0.5)
+    if causal:
+        qi = q_offset + jnp.arange(tq)[:, None]
+        ki = jnp.arange(k.shape[2])[None, :]
+        ok = ki <= qi
+        if window > 0:
+            ok &= ki > qi - window
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", w, vf)
+    return o.reshape(b, hq, tq, hd).astype(q.dtype)

@@ -1,0 +1,31 @@
+"""Public jit'd entry points for the Jacobi stencil kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import jacobi_sweep_pallas
+from .ref import jacobi_sweep_ref
+
+
+def jacobi_sweep(f: jnp.ndarray, c: float = 1.0 / 6.0, di: int = 10,
+                 dj: int = 10, use_pallas: bool = True,
+                 interpret: bool = True) -> jnp.ndarray:
+    """One Jacobi sweep; Pallas kernel (TPU target) or jnp reference.
+
+    ``interpret`` is forced on CPU (this container); on real TPU hardware
+    call with ``interpret=False``.
+    """
+    if use_pallas:
+        return jacobi_sweep_pallas(f, c, di=di, dj=dj, interpret=interpret)
+    return jacobi_sweep_ref(f, c)
+
+
+def jacobi_iterate(f: jnp.ndarray, steps: int, c: float = 1.0 / 6.0,
+                   use_pallas: bool = False) -> jnp.ndarray:
+    """`steps` sweeps via lax.scan (double-buffered, as in the paper)."""
+    def body(carry, _):
+        return jacobi_sweep(carry, c, use_pallas=use_pallas), None
+
+    out, _ = jax.lax.scan(body, f, None, length=steps)
+    return out

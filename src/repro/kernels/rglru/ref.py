@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the RG-LRU linear recurrence h_t = a_t h_{t-1} + b_t."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jnp.ndarray, b: jnp.ndarray,
+                   h0: jnp.ndarray | None = None) -> jnp.ndarray:
+    """a, b: (B, T, W); h0 (B, W). Returns h (B, T, W) — plain loop oracle."""
+    bt, t, w = a.shape
+    h = h0 if h0 is not None else jnp.zeros((bt, w), a.dtype)
+    outs = []
+    for i in range(t):
+        h = a[:, i] * h + b[:, i]
+        outs.append(h)
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence (per head):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    o_t = (S_{t-1} + diag(u) k_t v_tᵀ)ᵀ r_t
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    """r,k,v,w: (B, T, H, hd); u: (H, hd); s0: (B, H, hd, hd).
+    Returns (o (B,T,H,hd), sT)."""
+    b, t, h, hd = r.shape
+    s = s0 if s0 is not None else jnp.zeros((b, h, hd, hd), jnp.float32)
+    outs = []
+    for i in range(t):
+        rt, kt, vt, wt = (x[:, i].astype(jnp.float32) for x in (r, k, v, w))
+        kv = kt[..., :, None] * vt[..., None, :]
+        s_eff = s + u[None, :, :, None].astype(jnp.float32) * kv
+        outs.append(jnp.einsum("bhij,bhi->bhj", s_eff, rt))
+        s = wt[..., :, None] * s + kv
+    return jnp.stack(outs, axis=1), s

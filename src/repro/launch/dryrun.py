@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh (16x16 single-pod or 2x16x16
+multi-pod), the model's abstract parameters/optimizer state/caches
+(ShapeDtypeStructs — no allocation), jits the step with explicit
+in/out_shardings, and runs ``.lower().compile()``.  Success proves the
+sharding config is coherent; ``memory_analysis()`` proves it fits;
+``cost_analysis()`` + the partitioned-HLO collective parse feed the
+roofline table (EXPERIMENTS.md §Roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out experiments/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import SHAPES, cell_is_applicable, get_config, list_archs
+from ..configs.base import ModelConfig, ShapeConfig
+from ..distributed.sharding import ShardingRules, make_rules, use_rules
+from ..models.model import build_model, param_shardings
+from ..roofline.analysis import analyze, model_flops_infer, model_flops_train
+from ..train.optimizer import init_opt_state, opt_state_shardings
+from ..train.train_step import make_decode_step, make_prefill_step, make_train_step
+from .mesh import make_production_mesh
+
+
+def cell_rules(cfg: ModelConfig, shape: ShapeConfig, mesh) -> ShardingRules:
+    model_size = mesh.shape["model"]
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = 1
+    for a in data_axes:
+        dp *= mesh.shape[a]
+    shard_heads = cfg.num_heads > 0 and cfg.num_heads % model_size == 0
+    rules = make_rules(mesh, fsdp=cfg.fsdp, shard_heads=shard_heads)
+    r = dict(rules.rules)
+    r["qheads"] = "model" if shard_heads else None
+    r["lru"] = "model"
+    r["lru_blocks"] = "model"
+    r["rwkv_ffn"] = "model"
+    r["zero"] = "data"
+    # batch shardability per shape
+    b = shape.global_batch
+    if shape.kind == "train" and cfg.microbatches > 1:
+        b = b // cfg.microbatches
+    if b % dp != 0:
+        # cannot shard batch (e.g. long_500k B=1): replicate batch, shard the
+        # KV sequence over every axis instead
+        r["batch"] = None
+        r["kv_seq"] = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    return ShardingRules(mesh=mesh, rules=r)
+
+
+def batch_shardings(specs: dict, rules: ShardingRules):
+    out = {}
+    for name, s in specs.items():
+        if name in ("tokens", "labels"):
+            out[name] = rules.sharding("batch", *([None] * (len(s.shape) - 1)))
+        else:  # frames / vision
+            out[name] = rules.sharding("batch", None, None)
+    return out
+
+
+def cache_shardings(cache_specs, rules: ShardingRules):
+    def leaf(path, spec):
+        names = [getattr(k, "key", None) for k in path]
+        name = names[-1]
+        nd = len(spec.shape)
+        if name in ("k", "v"):
+            ax = ("batch", "kv_seq", None, None)
+        elif name in ("ckv", "kr"):
+            ax = ("batch", "kv_seq", None)
+        elif name in ("xk", "xv"):
+            ax = ("batch", None, None, None)
+        elif name == "h":
+            ax = ("batch", "lru")
+        elif name == "conv":
+            ax = ("batch", None, "lru")
+        elif name in ("x_tm", "x_cm"):
+            ax = ("batch", None)
+        elif name == "s":
+            ax = ("batch", None, None, None)
+        else:
+            ax = (None,) * nd
+        if len(ax) < nd:  # stacked group caches
+            ax = (None,) * (nd - len(ax)) + tuple(ax)
+        return rules.sharding(*ax)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_specs)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_applicable(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if shape.kind == "train" and cfg.microbatches > 1:
+        # keep each microbatch shardable across the (pod, data) axes —
+        # otherwise the batch silently replicates (vision-90B multi-pod
+        # was 99 GiB/chip from exactly this)
+        import dataclasses
+        dp = mesh.size // mesh.shape["model"]
+        mb = max(min(cfg.microbatches, shape.global_batch // dp), 1)
+        if mb != cfg.microbatches:
+            cfg = dataclasses.replace(cfg, microbatches=mb)
+    rules = cell_rules(cfg, shape, mesh)
+    model = build_model(cfg, max_pos=shape.seq_len)
+
+    with jax.set_mesh(mesh), use_rules(rules):
+        params_abs = model.abstract_params()
+        p_sh = param_shardings(cfg, params_abs, rules)
+
+        if shape.kind == "train":
+            opt_abs = jax.eval_shape(init_opt_state, params_abs)
+            o_sh = opt_state_shardings(p_sh, rules, params_abs)
+            batch_abs = model.input_specs(shape)
+            b_sh = batch_shardings(batch_abs, rules)
+            step = make_train_step(model)
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+            tokens = shape.global_batch * shape.seq_len
+            mf = model_flops_train(cfg.active_params(), tokens)
+        elif shape.kind == "prefill":
+            cache_abs = model.cache_specs(shape)
+            c_sh = cache_shardings(cache_abs, rules)
+            batch_abs = model.input_specs(shape)
+            b_sh = batch_shardings(batch_abs, rules)
+            step = make_prefill_step(model)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_abs, batch_abs, cache_abs)
+            mf = model_flops_infer(cfg.active_params(),
+                                   shape.global_batch * shape.seq_len)
+        else:  # decode
+            cache_abs = model.cache_specs(shape)
+            c_sh = cache_shardings(cache_abs, rules)
+            tok_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            t_sh = rules.sharding("batch", None)
+            pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+            step = make_decode_step(model)
+            jitted = jax.jit(step, in_shardings=(p_sh, t_sh, None, c_sh),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(3,))
+            lowered = jitted.lower(params_abs, tok_abs, pos_abs, cache_abs)
+            mf = model_flops_infer(cfg.active_params(), shape.global_batch)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        roof = analyze(compiled)
+        n_chips = mesh.size
+        hlo_flops_global = roof.flops * n_chips
+        result = {
+            "status": "ok",
+            "mesh": "multi_pod" if multi_pod else "single_pod",
+            "chips": n_chips,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes_per_chip": mem.argument_size_in_bytes,
+                "output_bytes_per_chip": mem.output_size_in_bytes,
+                "temp_bytes_per_chip": mem.temp_size_in_bytes,
+                "alias_bytes_per_chip": mem.alias_size_in_bytes,
+                "peak_estimate_per_chip": mem.argument_size_in_bytes
+                + mem.output_size_in_bytes + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes,
+            },
+            "roofline": roof.as_dict(),
+            "model_flops_global": mf,
+            "useful_flops_ratio": (mf / hlo_flops_global
+                                   if hlo_flops_global else 0.0),
+        }
+        return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = {}
+    if out_path.exists() and not args.force:
+        results = json.loads(out_path.read_text())
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = f"{arch}|{shape}|{'multi' if mp else 'single'}"
+                if key in results and results[key].get("status") in ("ok", "skipped") \
+                        and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[run]    {key} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape, mp)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    res = {"status": "error", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                results[key] = res
+                out_path.write_text(json.dumps(results, indent=1))
+                status = res.get("status")
+                extra = ""
+                if status == "ok":
+                    r = res["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" t=({r['t_compute_s']:.2e},{r['t_memory_s']:.2e},"
+                             f"{r['t_collective_s']:.2e})s"
+                             f" mem={res['memory']['peak_estimate_per_chip']/2**30:.2f}GiB")
+                elif status == "error":
+                    extra = " " + res["error"][:160]
+                print(f"[done]   {key}: {status}{extra}", flush=True)
+
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in results.values() if r.get("status") == "skipped")
+    n_err = sum(1 for r in results.values() if r.get("status") == "error")
+    print(f"\ntotal: {len(results)} cells — ok={n_ok} skipped={n_skip} errors={n_err}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to obtain placeholder devices.
+
+Single pod: (16, 16) = (data, model) — 256 chips (one v5e pod).
+Multi-pod:  (2, 16, 16) = (pod, data, model) — 512 chips; the "pod" axis is
+the slow (DCN) tier, used for data parallelism or pipeline stages so that
+bandwidth-hungry collectives stay inside a pod (the paper's locality
+domains, one tier up).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for in-repo integration tests (8 host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

@@ -1,0 +1,29 @@
+"""MLP blocks: gated (SwiGLU/GeGLU) and plain (whisper's GELU MLP)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import shard
+from .common import Params, act_fn, dense_init, matmul_lowp, split_keys
+
+
+def mlp_init(key: jax.Array, d: int, f: int, gated: bool = True,
+             dtype=jnp.float32) -> Params:
+    ks = split_keys(key, 3)
+    p = {"w_up": dense_init(ks[0], d, f, dtype),
+         "w_down": dense_init(ks[1], f, d, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d, f, dtype)
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    h = x @ p["w_up"]
+    if "w_gate" in p:
+        h = act_fn(act)(x @ p["w_gate"]) * h
+    else:
+        h = act_fn(act)(h)
+    h = shard(h, "batch", None, "ffn")
+    return matmul_lowp(h, p["w_down"])

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts with expert parallelism and locality-biased routing.
+
+The dispatch/combine are Switch-Transformer-style one-hot einsums over
+per-device token groups; experts are sharded over the ``model`` axis (EP),
+so the dispatched activations move through an all-to-all that XLA's SPMD
+partitioner inserts between the group-sharded and expert-sharded einsums.
+
+**Locality-biased routing — the paper's technique as a first-class
+feature**: each token group (= device) has a set of *local* experts (those
+resident on the same model-axis coordinate when dispatch is EP-local, or
+the same pod in multi-pod meshes).  A bias is added to the router logits of
+local experts, exactly like the paper's locality queues prefer the home
+domain's tasks; the capacity limit plays the role of bounded work stealing
+(overflow tokens spill to remote experts), and the auxiliary load-balance
+loss enforces the paper's balance-over-locality priority.  The measurable
+effect is a smaller all-to-all (collective roofline term) at equal step
+semantics — see EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import current_rules, shard
+from .common import Params, dense_init, split_keys
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    m = cfg.moe
+    d, e, f = cfg.d_model, m.num_experts, m.d_ff_expert
+    ks = split_keys(key, 4)
+    scale = 1.0 / jnp.sqrt(d)
+    return {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": (jax.random.truncated_normal(ks[1], -3, 3, (e, d, f)) * scale).astype(dtype),
+        "w_up": (jax.random.truncated_normal(ks[2], -3, 3, (e, d, f)) * scale).astype(dtype),
+        "w_down": (jax.random.truncated_normal(ks[3], -3, 3, (e, f, d)) * (1.0 / jnp.sqrt(f))).astype(dtype),
+    }
+
+
+def _local_expert_bias(num_groups: int, num_experts: int,
+                       bias: float) -> jnp.ndarray:
+    """(G, E) bias favoring experts co-resident with each token group.
+
+    Group g's tokens live on model-axis coordinate (g % A) when groups are
+    laid out batch-major over a (data, model)-flattened device order; expert
+    e lives on coordinate (e // (E/A)).  The bias is the paper's "local
+    queue first" preference in logit space.
+    """
+    rules = current_rules()
+    a = 1
+    if rules is not None:
+        model_axis = rules.rules.get("experts")
+        if model_axis is not None:
+            a = rules.mesh.shape[model_axis]
+    if a <= 1 or num_experts % a:
+        return jnp.zeros((num_groups, num_experts), jnp.float32)
+    per = num_experts // a
+    g_coord = jnp.arange(num_groups) % a
+    e_coord = jnp.arange(num_experts) // per
+    return jnp.where(g_coord[:, None] == e_coord[None, :], bias, 0.0)
+
+
+GROUP_TOKENS = 512   # dispatch/combine one-hots are O(T_g^2): keep T_g small
+
+
+def moe_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+              num_groups: Optional[int] = None):
+    """x: (B, T, D) -> (out, aux_loss).
+
+    Tokens are reshaped to (G, T', D) groups riding the data-parallel batch
+    sharding.  The per-group (T', E, C) dispatch tensor scales as T'^2·k/E,
+    so groups are capped at GROUP_TOKENS tokens (the sort-based dispatch
+    that avoids the one-hot entirely is the §Perf follow-up).
+    """
+    m = cfg.moe
+    b, t, d = x.shape
+    e, k = m.num_experts, m.top_k
+    if num_groups is None:
+        per_seq = max(t // GROUP_TOKENS, 1)
+        num_groups = b * per_seq
+    g = num_groups
+    xg = x.reshape(g, (b * t) // g, d)
+    tokens = xg.shape[1]
+
+    logits = (xg @ p["router"].astype(xg.dtype)).astype(jnp.float32)  # (G,T,E)
+    if m.locality_bias:
+        logits = logits + _local_expert_bias(g, e, m.locality_bias)[:, None, :]
+
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)                     # (G,T,k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # capacity per expert per group (bounded stealing: overflow is dropped
+    # to the residual path, the SPMD analogue of re-queueing)
+    cap = max(int(tokens * k / e * m.capacity_factor), 1)
+
+    # position of each (token, choice) in its expert's queue
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.int32)        # (G,T,k,E)
+    flat = onehot.reshape(g, tokens * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1                       # arrival order
+    pos = pos.reshape(g, tokens, k, e)
+    in_cap = (pos < cap) & (onehot > 0)
+
+    # combine weights (G,T,E,cap); dispatch = nonzero mask
+    pos_oh = jax.nn.one_hot(jnp.where(in_cap, pos, -1), cap, dtype=xg.dtype)
+    combine = jnp.einsum("gtke,gtkec,gtk->gtec", onehot.astype(xg.dtype),
+                         pos_oh, topv.astype(xg.dtype))
+    dispatch = combine > 0
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch.astype(xg.dtype), xg)
+    expert_in = shard(expert_in, "batch", "experts", None, None)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    expert_out = shard(expert_out, "batch", "experts", None, None)
+
+    out = jnp.einsum("gtec,gecd->gtd", combine, expert_out)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    density = dispatch.any(-1).astype(jnp.float32).mean(axis=1)   # (G,E) frac tokens
+    router_prob = gates.mean(axis=1)                              # (G,E)
+    aux = (density * router_prob).sum(-1).mean() * e * m.router_aux_weight
+
+    return out.reshape(b, t, d), aux

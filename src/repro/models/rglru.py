@@ -1,0 +1,161 @@
+"""Griffin / RecurrentGemma recurrent block: conv1d + RG-LRU.
+
+RG-LRU (Real-Gated Linear Recurrent Unit, arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t + b_a)              (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)              (input gate)
+    a_t = exp(-c * softplus(Λ) * r_t)         (data-dependent decay, c=8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The recurrence is linear in h, so training/prefill uses an associative scan
+(log-depth on TPU); decode is an O(1) state update.  The surrounding block
+is Griffin's: two input branches (GeLU gate × conv1d→RG-LRU), merged by an
+output projection.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import Params, dense_init, matmul_lowp, split_keys
+
+_C = 8.0
+_CONV_W = 4
+
+
+def _gate_blocks(w: int) -> int:
+    """Griffin's RG-LRU gates use BLOCK-DIAGONAL weights (one block per
+    head in the reference implementation).  Block-diagonality is also the
+    locality win on the mesh: each lru-shard's gates depend only on its own
+    channels, so the gate matmuls contract shard-locally — no all-reduce
+    (EXPERIMENTS.md §Perf-2)."""
+    for nb in (16, 8, 4, 2):
+        if w % nb == 0 and (w // nb) >= 8:
+            return nb
+    return 1
+
+
+def rglru_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    w = d  # lru width = d_model
+    nb = _gate_blocks(w)
+    bw = w // nb
+    ks = split_keys(key, 6)
+    scale = 1.0 / jnp.sqrt(bw)
+    return {
+        "w_gate_branch": dense_init(ks[0], d, w, dtype),
+        "w_x_branch": dense_init(ks[1], d, w, dtype),
+        "conv_w": (jax.random.truncated_normal(ks[2], -3, 3, (_CONV_W, w)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": (jax.random.truncated_normal(ks[3], -3, 3, (nb, bw, bw)) * scale).astype(dtype),
+        "b_a": jnp.zeros((w,), dtype),
+        "w_i": (jax.random.truncated_normal(ks[4], -3, 3, (nb, bw, bw)) * scale).astype(dtype),
+        "b_i": jnp.zeros((w,), dtype),
+        # Λ init so that a = exp(-c*softplus(Λ)) spans ~(0.9, 0.999)
+        "lam": jnp.asarray(
+            jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)),
+            dtype=jnp.float32),
+        "w_out": dense_init(ks[5], w, d, dtype),
+    }
+
+
+def _block_diag_matmul(u: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """u (B,T,W) x block-diagonal w (nb, W/nb, W/nb) -> (B,T,W)."""
+    b, t, width = u.shape
+    nb, bw, _ = w.shape
+    ub = u.reshape(b, t, nb, bw)
+    out = jnp.einsum("btnw,nwv->btnv", ub, w)
+    return out.reshape(b, t, width)
+
+
+def _rglru_scan(a: jnp.ndarray, bx: jnp.ndarray,
+                h0: Optional[jnp.ndarray] = None,
+                chunk: int = 256) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + bx_t over axis 1 (time).
+
+    Chunked scan with rematerialization: the backward pass keeps only the
+    chunk-boundary states (T/chunk x (B, W)) and recomputes inside each
+    chunk — the same blocking the Pallas kernel uses in VMEM.  Short or
+    non-divisible sequences fall back to an associative scan.
+    """
+    if h0 is not None:
+        # fold the carried state into the first step
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    b, t, w = a.shape
+    if t % chunk or t <= chunk:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        return h
+
+    nc = t // chunk
+    a_c = a.reshape(b, nc, chunk, w).swapaxes(0, 1)
+    b_c = bx.reshape(b, nc, chunk, w).swapaxes(0, 1)
+
+    def chunk_fn(h, inp):
+        ac, bc = inp                       # (b, chunk, w)
+        def step(hh, xs):
+            ai, bi = xs
+            hh = ai * hh + bi
+            return hh, hh
+        h, hs = jax.lax.scan(step, h, (ac.swapaxes(0, 1), bc.swapaxes(0, 1)))
+        return h, hs.swapaxes(0, 1)
+
+    # default checkpoint: saves only chunk inputs; the backward pass
+    # recomputes the chunk forward once with transient residuals (NOT
+    # nothing_saveable, which would force O(chunk^2) re-recomputation
+    # inside the inner scan's backward)
+    chunk_fn = jax.checkpoint(chunk_fn)
+    _, outs = jax.lax.scan(chunk_fn, jnp.zeros((b, w), a.dtype), (a_c, b_c))
+    return outs.swapaxes(0, 1).reshape(b, t, w)
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d, width 4. x (B,T,W); state (B,3,W) history.
+
+    Returns (y, new_state)."""
+    hist = state if state is not None else jnp.zeros(
+        (x.shape[0], _CONV_W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(_CONV_W)) + b
+    return y, xp[:, -(_CONV_W - 1):]
+
+
+def rglru_block(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                cache: Optional[Params] = None):
+    """Griffin recurrent block. cache = {"h": (B,W), "conv": (B,3,W)}."""
+    gate = jax.nn.gelu(x @ p["w_gate_branch"], approximate=True)
+    u = x @ p["w_x_branch"]
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"],
+                                 cache["conv"] if cache is not None else None)
+
+    r = jax.nn.sigmoid((_block_diag_matmul(u, p["w_a"]) + p["b_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((_block_diag_matmul(u, p["w_i"]) + p["b_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    # keep u's cotangent path in bf16: (beta*i) folds to the input dtype
+    # before touching u, so the backward row-parallel psums toward x stay
+    # bf16 instead of f32 (§Perf-2); the recurrence itself stays f32.
+    bx = ((beta * i).astype(u.dtype) * u).astype(jnp.float32)
+
+    if cache is not None and x.shape[1] == 1:
+        h = a[:, 0] * cache["h"].astype(jnp.float32) + bx[:, 0]
+        out = h[:, None]
+        new_cache = {"h": h.astype(cache["h"].dtype), "conv": conv_state}
+    else:
+        h0 = cache["h"].astype(jnp.float32) if cache is not None else None
+        out = _rglru_scan(a, bx, h0)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"h": out[:, -1].astype(cache["h"].dtype),
+                         "conv": conv_state}
+
+    y = matmul_lowp(out.astype(x.dtype) * gate, p["w_out"])
+    return y, new_cache

@@ -1,0 +1,180 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Time-mix recurrence per head (state S ∈ R^{hd x hd}):
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    o_t = (S_{t-1} + diag(u) k_t v_tᵀ)ᵀ r_t
+with per-channel, data-dependent decay w_t = exp(-exp(ŵ_t)) (the paper's
+"Finch" innovation over RWKV-5's static decay).  Token-shift interpolation
+(lerp between x_t and x_{t-1}) feeds every projection; the data-dependent
+shift uses a small LoRA as in the reference implementation.
+
+Training/prefill runs a chunked lax.scan (state carried between chunks —
+sub-quadratic, O(T·hd²) work); the Pallas kernel (repro.kernels.rwkv6)
+implements the same chunk recurrence for TPU.  Decode is an O(1) update.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import Params, dense_init, split_keys
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def rwkv_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = _heads(cfg)
+    lora = 64
+    ks = split_keys(key, 12)
+    return {
+        # time-mix
+        "mix_base": (jax.random.uniform(ks[0], (5, d)) * 0.5).astype(dtype),
+        "mix_lora_a": dense_init(ks[1], d, 32, dtype),
+        "mix_lora_b": (jnp.zeros((32, 5 * d), dtype)),
+        "w_r": dense_init(ks[2], d, d, dtype),
+        "w_k": dense_init(ks[3], d, d, dtype),
+        "w_v": dense_init(ks[4], d, d, dtype),
+        "w_g": dense_init(ks[5], d, d, dtype),
+        "decay_base": (jnp.full((d,), -6.0, dtype)),
+        "decay_lora_a": dense_init(ks[6], d, lora, dtype),
+        "decay_lora_b": jnp.zeros((lora, d), dtype),
+        "u": (jax.random.uniform(ks[7], (h, hd)) * 0.5).astype(dtype),
+        "gn_scale": jnp.ones((d,), dtype),
+        "gn_bias": jnp.zeros((d,), dtype),
+        "w_o": dense_init(ks[8], d, d, dtype),
+        # channel-mix
+        "cmix_k": (jax.random.uniform(ks[9], (d,)) * 0.5).astype(dtype),
+        "cmix_r": (jax.random.uniform(ks[10], (d,)) * 0.5).astype(dtype),
+        "w_ck": dense_init(ks[11], d, cfg.d_ff, dtype),
+        "w_cv": dense_init(ks[0], cfg.d_ff, d, dtype),
+        "w_cr": dense_init(ks[1], d, d, dtype),
+    }
+
+
+def _token_shift(x: jnp.ndarray, x_prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """x_{t-1} sequence (first step uses carried state or zeros)."""
+    first = x_prev[:, None] if x_prev is not None else \
+        jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _wkv_chunk_scan(r, k, v, w, u, s0, chunk: int = 128):
+    """Chunked WKV recurrence: scan over time chunks with the inner chunk
+    rematerialized, so the backward pass stores only T/chunk boundary
+    states (B,H,hd,hd) instead of one per step — the same blocking the
+    Pallas kernel (repro.kernels.rwkv6) keeps in VMEM.
+
+    r,k,v: (B,T,H,hd); w: (B,T,H,hd) decay in (0,1); u: (H,hd) bonus.
+    s0: (B,H,hd,hd) initial state. Returns (o: (B,T,H,hd), sT).
+    """
+    b, t, h, hd = r.shape
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp          # (B,H,hd) each
+        rt, kt, vt = (a.astype(jnp.float32) for a in (rt, kt, vt))
+        kv = kt[..., :, None] * vt[..., None, :]         # (B,H,hd,hd)
+        # o_t uses S_{t-1} plus the u-weighted current pair
+        s_eff = s + u[None, :, :, None] * kv
+        ot = jnp.einsum("bhij,bhi->bhj", s_eff, rt)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, ot
+
+    if t % chunk or t <= chunk:
+        xs = tuple(x.transpose(1, 0, 2, 3) for x in (r, k, v, w))
+        sT, o = jax.lax.scan(step, s0, xs)
+        return o.transpose(1, 0, 2, 3), sT
+
+    nc = t // chunk
+    # (nc, chunk, b, h, hd)
+    xs = tuple(x.reshape(b, nc, chunk, h, hd).transpose(1, 2, 0, 3, 4)
+               for x in (r, k, v, w))
+
+    def chunk_fn(s, inp):
+        s, o = jax.lax.scan(step, s, inp)
+        return s, o
+
+    # default checkpoint: saves only chunk inputs; the backward pass
+    # recomputes the chunk forward once with transient residuals (NOT
+    # nothing_saveable, which would force O(chunk^2) re-recomputation
+    # inside the inner scan's backward)
+    chunk_fn = jax.checkpoint(chunk_fn)
+    sT, o = jax.lax.scan(chunk_fn, s0, xs)       # o: (nc, chunk, b, h, hd)
+    o = o.reshape(nc * chunk, b, h, hd).transpose(1, 0, 2, 3)
+    return o, sT
+
+
+def rwkv_time_mix(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                  cache: Optional[Params] = None):
+    """Returns (out, new_cache). cache = {"s": (B,H,hd,hd), "x_tm": (B,D)}."""
+    b, t, d = x.shape
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+
+    x_last = _token_shift(x, cache["x_tm"] if cache is not None else None)
+    dx = x_last - x
+    # data-dependent lerp amounts (5 projections share a LoRA)
+    lora = jnp.tanh(x @ p["mix_lora_a"]) @ p["mix_lora_b"]
+    mix = p["mix_base"][:, None, None] + lora.reshape(b, t, 5, d).transpose(2, 0, 1, 3)
+    xr, xk, xv, xw, xg = [x + dx * mix[i] for i in range(5)]
+
+    r = (xr @ p["w_r"]).reshape(b, t, h, hd)
+    k = (xk @ p["w_k"]).reshape(b, t, h, hd)
+    v = (xv @ p["w_v"]).reshape(b, t, h, hd)
+    g = jax.nn.silu(xg @ p["w_g"])
+
+    decay = p["decay_base"].astype(jnp.float32) + \
+        (jnp.tanh(xw @ p["decay_lora_a"]) @ p["decay_lora_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(decay)).reshape(b, t, h, hd).astype(jnp.float32)
+
+    s0 = cache["s"].astype(jnp.float32) if cache is not None else \
+        jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    if cache is not None and t == 1:
+        # match the prefill path's bf16 r/k/v streaming precision exactly
+        rt, kt, vt = (a[:, 0].astype(jnp.bfloat16).astype(jnp.float32)
+                      for a in (r, k, v))
+        wt = w[:, 0]
+        kv = kt[..., :, None] * vt[..., None, :]
+        s_eff = s0 + p["u"].astype(jnp.float32)[None, :, :, None] * kv
+        o = jnp.einsum("bhij,bhi->bhj", s_eff, rt)[:, None]
+        sT = wt[..., :, None] * s0 + kv
+    else:
+        # stream r/k/v in bf16 (state and decay stay f32): halves the
+        # dominant scan-xs traffic and the rematerialized-chunk footprint
+        o, sT = _wkv_chunk_scan(r.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+                                v.astype(jnp.bfloat16), w,
+                                p["u"].astype(jnp.float32), s0)
+
+    o = o.reshape(b, t, d)
+    # group norm over heads
+    og = o.reshape(b, t, h, hd)
+    mu = og.mean(-1, keepdims=True)
+    var = og.var(-1, keepdims=True)
+    og = (og - mu) * jax.lax.rsqrt(var + 1e-5)
+    o = og.reshape(b, t, d) * p["gn_scale"].astype(jnp.float32) + \
+        p["gn_bias"].astype(jnp.float32)
+    out = (o.astype(x.dtype) * g) @ p["w_o"]
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"s": sT.astype(cache["s"].dtype), "x_tm": x[:, -1]}
+    return out, new_cache
+
+
+def rwkv_channel_mix(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                     cache: Optional[Params] = None):
+    """relu² channel mix with token shift. cache = {"x_cm": (B,D)}."""
+    x_last = _token_shift(x, cache["x_cm"] if cache is not None else None)
+    dx = x_last - x
+    xk = x + dx * p["cmix_k"]
+    xr = x + dx * p["cmix_r"]
+    v = jnp.square(jax.nn.relu(xk @ p["w_ck"])) @ p["w_cv"]
+    out = jax.nn.sigmoid(xr @ p["w_cr"]) * v
+    new_cache = {"x_cm": x[:, -1]} if cache is not None else None
+    return out, new_cache

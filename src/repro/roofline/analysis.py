@@ -1,0 +1,154 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = collective_bytes / link_bw       (per chip)
+
+``compiled.cost_analysis()`` reports the *partitioned* (per-device) module,
+so its flops/bytes are already per-chip (verified against a hand-counted
+matmul in tests/test_roofline.py).  Collective bytes are not in
+cost_analysis; they are parsed from the partitioned HLO text — per
+collective kind the wire volume per device is approximately:
+
+    all-gather          result bytes          (receive volume)
+    reduce-scatter      operand bytes         (send volume)
+    all-reduce          2 x operand bytes     (reduce-scatter + all-gather)
+    all-to-all          operand bytes
+    collective-permute  operand bytes
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVE_WEIGHTS = {
+    "all-reduce": ("operand", 2.0),
+    "all-gather": ("result", 1.0),
+    "reduce-scatter": ("operand", 1.0),
+    "all-to-all": ("operand", 1.0),
+    "collective-permute": ("operand", 1.0),
+    "ragged-all-to-all": ("operand", 1.0),
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device wire bytes by collective kind, from partitioned HLO text."""
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVE_WEIGHTS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        lhs, _, rhs = line.partition(" = ")
+        m = re.match(r"(?:\([^)]*\)|\S+)\s+([a-z0-9-]+)(?:-start)?\(", rhs)
+        if not m:
+            continue
+        op = m.group(1)
+        if op.endswith("-start"):
+            op = op[:-6]
+        if op not in _COLLECTIVE_WEIGHTS:
+            continue
+        side, weight = _COLLECTIVE_WEIGHTS[op]
+        if side == "result":
+            result_part = rhs.split(op)[0]
+            nbytes = _shape_bytes(result_part)
+        else:
+            args_part = rhs[rhs.index("("):]
+            nbytes = _shape_bytes(args_part)
+        out[op] += nbytes * weight
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # per chip
+    hbm_bytes: float              # per chip
+    coll_bytes: float             # per chip (weighted wire volume)
+    coll_by_kind: dict[str, float]
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "collective_bytes_per_chip": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "coll_by_kind": self.coll_by_kind,
+        }
+
+
+def analyze(compiled) -> Roofline:
+    """Loop-aware analysis of the partitioned module.
+
+    ``compiled.cost_analysis()`` counts while-loop bodies once; the HLO
+    walker in ``hlo_cost`` multiplies by trip counts (scan-over-layers,
+    microbatch accumulation, chunked attention), which is essential for
+    honest roofline terms — see tests/test_roofline.py.
+    """
+    from .hlo_cost import analyze_text
+    cost = analyze_text(compiled.as_text())
+    coll = dict(cost.coll)
+    return Roofline(flops=cost.flops, hbm_bytes=cost.bytes,
+                    coll_bytes=sum(coll.values()), coll_by_kind=coll)
+
+
+def model_flops_train(n_active_params: int, tokens: int) -> float:
+    """6·N·D for a train step (fwd+bwd) over `tokens` tokens."""
+    return 6.0 * n_active_params * tokens
+
+
+def model_flops_infer(n_active_params: int, tokens: int) -> float:
+    """2·N·D for inference."""
+    return 2.0 * n_active_params * tokens

@@ -1,0 +1,122 @@
+"""AdamW with fp32 master weights, built from scratch (no optax).
+
+State layout per parameter leaf: fp32 master copy + fp32 first/second
+moments.  For ZeRO-1-style sharding the optimizer state gets an extra
+"zero" logical axis (mapped to the data mesh axis) on the first shardable
+dimension — for scanned stacks that is the layer-stack axis, which spreads
+the optimizer memory of replicated (TP-only) weights across data-parallel
+peers; XLA inserts the reduce-scatter/all-gather pair this implies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def schedule(c: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay."""
+    warm = jnp.minimum(step / jnp.maximum(c.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - c.warmup_steps) /
+                    jnp.maximum(c.total_steps - c.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return c.lr * warm * (c.min_lr_frac + (1 - c.min_lr_frac) * cos)
+
+
+def init_opt_state(params: Params) -> dict:
+    # copy=True: with float32 params, astype would alias the param buffer and
+    # break donation (same buffer donated twice in the jitted step)
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    return {
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(c: AdamWConfig, grads: Params, opt_state: dict,
+                 param_dtype=jnp.bfloat16):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule(c, step.astype(jnp.float32))
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    b1c = 1 - c.b1 ** step.astype(jnp.float32)
+    b2c = 1 - c.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = c.b1 * m + (1 - c.b1) * g
+        v = c.b2 * v + (1 - c.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + c.eps) + c.weight_decay * master
+        master = master - lr * delta
+        return m, v, master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_w = treedef.flatten_up_to(opt_state["master"])
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda w: w.astype(param_dtype), new_master)
+    new_state = {"master": new_master, "m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def opt_state_shardings(param_shardings_tree, rules, param_tree):
+    """Shardings for opt state: like params, plus the "zero" axis on the
+    first still-unsharded, divisible dimension (ZeRO-1)."""
+    data_size = 1
+    zero_axis = rules.rules.get("zero")
+    if zero_axis is not None:
+        data_size = rules.mesh.shape[zero_axis]
+
+    def zero_shard(sharding, leaf):
+        spec = list(sharding.spec) + [None] * (len(leaf.shape) - len(sharding.spec))
+        used = {a for s in spec if s is not None
+                for a in ((s,) if isinstance(s, str) else s)}
+        if zero_axis is not None and zero_axis not in used:
+            for i, s in enumerate(spec):
+                if s is None and leaf.shape[i] % data_size == 0 and data_size > 1:
+                    spec[i] = zero_axis
+                    break
+        from jax.sharding import NamedSharding, PartitionSpec
+        return NamedSharding(rules.mesh, PartitionSpec(*spec))
+
+    like_params = jax.tree.map(zero_shard, param_shardings_tree, param_tree)
+    from jax.sharding import NamedSharding, PartitionSpec
+    return {
+        "master": like_params,
+        "m": like_params,
+        "v": like_params,
+        "step": NamedSharding(rules.mesh, PartitionSpec()),
+    }

@@ -1,0 +1,72 @@
+"""Data pipeline: determinism, learnable structure, locality sharding."""
+import numpy as np
+
+from repro.data.pipeline import (DataConfig, ShardedLoader, SyntheticCorpus,
+                                 make_batch_iterator)
+
+
+class TestDeterminism:
+    def test_shards_reproducible(self):
+        cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=4)
+        c1, c2 = SyntheticCorpus(cfg), SyntheticCorpus(cfg)
+        np.testing.assert_array_equal(c1.shard_tokens(3, 128),
+                                      c2.shard_tokens(3, 128))
+
+    def test_shards_differ(self):
+        cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=4)
+        c = SyntheticCorpus(cfg)
+        assert not np.array_equal(c.shard_tokens(0, 128), c.shard_tokens(1, 128))
+
+    def test_iterator_replay(self):
+        it1 = make_batch_iterator(500, 16, 4, seed=9)
+        it2 = make_batch_iterator(500, 16, 4, seed=9)
+        for _ in range(3):
+            b1, b2 = next(it1), next(it2)
+            np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+            np.testing.assert_array_equal(b1["labels"], b2["labels"])
+
+    def test_labels_are_shifted_tokens(self):
+        b = next(make_batch_iterator(500, 16, 2, seed=1))
+        assert b["tokens"].shape == (2, 16)
+        assert b["labels"].shape == (2, 16)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+class TestStructure:
+    def test_bigram_structure_learnable(self):
+        """The injected deterministic bigram makes next-token prediction
+        beat the unigram entropy — a ~100M model has signal to learn."""
+        cfg = DataConfig(vocab_size=200, seq_len=32, global_batch=4)
+        c = SyntheticCorpus(cfg)
+        toks = c.shard_tokens(0, 50000)
+        prev, nxt = toks[:-1], toks[1:]
+        predicted = (prev + c.bigram_shift[prev % 257]) % cfg.vocab_size
+        hit = float(np.mean(nxt == predicted))
+        # ~50% of positions substitute the deterministic bigram, but the
+        # predictor only fires when the PREVIOUS token was left random too,
+        # so the observable hit rate is ~25% — far above the 1/V floor.
+        assert hit > 0.2
+
+
+class TestLocalitySharding:
+    def test_all_shards_covered_once(self):
+        cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=8,
+                         num_shards=16, num_hosts=4)
+        loaders = [ShardedLoader(cfg, host_id=h) for h in range(4)]
+        owned = sorted(s for l in loaders for s in l.my_shards)
+        assert owned == list(range(16))
+
+    def test_locality_fraction_high(self):
+        cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=8,
+                         num_shards=64, num_hosts=8)
+        l = ShardedLoader(cfg, host_id=0)
+        assert l.assignment.locality_fraction > 0.9
+
+    def test_prefetch_iterator_yields(self):
+        cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=4,
+                         num_shards=4, num_hosts=1)
+        l = ShardedLoader(cfg, host_id=0)
+        it = iter(l)
+        b = next(it)
+        assert b["tokens"].shape == (4, 8)
+        l.close()

@@ -1,0 +1,30 @@
+"""Multi-device integration tests.
+
+Run in a subprocess so the 8-device XLA_FLAGS override never leaks into this
+pytest process (smoke tests must see 1 device, per the dry-run contract).
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+CHECKS = Path(__file__).parent / "distributed_checks.py"
+
+
+@pytest.mark.timeout(900)
+def test_distributed_checks_subprocess():
+    env = dict(os.environ)
+    root = Path(__file__).resolve().parent.parent
+    env["PYTHONPATH"] = str(root / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(CHECKS)], env=env, capture_output=True,
+        text=True, timeout=880)
+    out = proc.stdout + proc.stderr
+    assert proc.returncode == 0, out[-4000:]
+    for name in ("stencil_locality", "sharded_train_matches_single",
+                 "pipeline_parallel", "collectives",
+                 "seq_parallel_attention", "dryrun_cell_small_mesh"):
+        assert f"OK {name}" in out, out[-4000:]
+    assert "ALL DISTRIBUTED CHECKS PASSED" in out

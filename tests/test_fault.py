@@ -1,0 +1,69 @@
+"""Fault tolerance: elastic re-mesh planning, schedule rebuild, stragglers."""
+import numpy as np
+import pytest
+
+from repro.distributed.fault import (DeviceSet, StragglerMonitor,
+                                     plan_elastic_mesh, rebuild_schedule)
+
+
+class TestElasticMesh:
+    def test_healthy_fleet_unchanged(self):
+        plan = plan_elastic_mesh(DeviceSet(pods=2, data=16, model=16))
+        assert plan["mesh_shape"] == (2, 16, 16)
+        assert plan["lost_fraction"] == 0.0
+
+    def test_single_chip_failure_drops_its_data_row(self):
+        devs = DeviceSet(pods=2, data=16, model=16,
+                         failed=frozenset({(0, 3, 7)}))
+        plan = plan_elastic_mesh(devs)
+        # rectangularity: both pods keep 15 rows
+        assert plan["mesh_shape"] == (2, 15, 16)
+        assert (0, 3) not in plan["kept_rows"]
+
+    def test_whole_pod_loss(self):
+        failed = frozenset((1, d, m) for d in range(16) for m in range(16))
+        plan = plan_elastic_mesh(DeviceSet(2, 16, 16, failed=failed))
+        assert plan["mesh_shape"] == (1, 16, 16)
+        assert plan["lost_fraction"] == pytest.approx(0.5)
+
+    def test_total_loss_raises(self):
+        failed = frozenset((p, d, 0) for p in range(2) for d in range(4))
+        with pytest.raises(RuntimeError):
+            plan_elastic_mesh(DeviceSet(2, 4, 4, failed=failed))
+
+
+class TestScheduleRebuild:
+    def test_rebuild_preserves_surviving_locality(self):
+        homes = np.array([0, 0, 1, 1, 2, 2, 3, 3])
+        cost = np.ones(8)
+        a = rebuild_schedule(homes, cost, old_domains=4, new_domains=2)
+        assert sorted(t for lst in a.lists for t in lst) == list(range(8))
+        # tasks homed in surviving domains 0/1 stay local
+        for d in (0, 1):
+            for t in np.flatnonzero(homes == d):
+                if t in a.lists[d]:
+                    continue
+            # balance may move some, but locality_fraction counts them
+        assert a.locality_fraction >= 0.5
+
+    def test_orphaned_tasks_rebalanced(self):
+        homes = np.full(12, 3)          # everything on a dead domain
+        a = rebuild_schedule(homes, np.ones(12), 4, 2)
+        sizes = [len(l) for l in a.lists]
+        assert sum(sizes) == 12
+        assert max(sizes) - min(sizes) <= 1
+
+
+class TestStragglerMonitor:
+    def test_flags_slow_domain(self):
+        mon = StragglerMonitor(num_domains=4, threshold=1.3)
+        for _ in range(10):
+            out = mon.update([1.0, 1.0, 1.0, 2.0])
+        assert out["stragglers"] == [3]
+        assert 0.0 < out["shed_fraction"][3] <= 0.5
+
+    def test_no_false_positives_on_uniform(self):
+        mon = StragglerMonitor(num_domains=4)
+        for _ in range(5):
+            out = mon.update([1.0, 1.01, 0.99, 1.0])
+        assert out["stragglers"] == []

@@ -1,0 +1,87 @@
+"""The loop-aware HLO cost analyzer vs hand-counted references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import LINK_BW, Roofline, collective_bytes
+from repro.roofline.hlo_cost import analyze_text
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+class TestFlops:
+    def test_plain_matmul(self):
+        a = jax.ShapeDtypeStruct((512, 1024), jnp.bfloat16)
+        b = jax.ShapeDtypeStruct((1024, 2048), jnp.bfloat16)
+        c = _compile(lambda a, b: a @ b, a, b)
+        cost = analyze_text(c.as_text())
+        expect = 2 * 512 * 1024 * 2048
+        assert abs(cost.flops - expect) / expect < 0.05
+
+    def test_scan_multiplies_by_trip_count(self):
+        """The whole reason hlo_cost exists: XLA's own cost_analysis counts
+        a while body once; we must count it trip_count times."""
+        def f(x, w):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            y, _ = jax.lax.scan(body, x, None, length=10)
+            return y
+        c = _compile(f, jax.ShapeDtypeStruct((512, 1024), jnp.bfloat16),
+                     jax.ShapeDtypeStruct((1024, 1024), jnp.bfloat16))
+        cost = analyze_text(c.as_text())
+        one = 2 * 512 * 1024 * 1024
+        assert abs(cost.flops - 10 * one) / (10 * one) < 0.1
+        # sanity: the built-in counter misses the multiplier
+        xla = c.cost_analysis()["flops"]
+        assert xla < 0.2 * cost.flops
+
+    def test_nested_scan(self):
+        def f(x, w):
+            def outer(c, _):
+                def inner(ci, _):
+                    return ci @ w, None
+                ci, _ = jax.lax.scan(inner, c, None, length=4)
+                return ci, None
+            y, _ = jax.lax.scan(outer, x, None, length=3)
+            return y
+        c = _compile(f, jax.ShapeDtypeStruct((128, 256), jnp.float32),
+                     jax.ShapeDtypeStruct((256, 256), jnp.float32))
+        cost = analyze_text(c.as_text())
+        one = 2 * 128 * 256 * 256
+        assert abs(cost.flops - 12 * one) / (12 * one) < 0.1
+
+    def test_grad_adds_backward_flops(self):
+        a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        b = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        c = _compile(jax.grad(lambda a, b: jnp.sum(a @ b), argnums=(0, 1)),
+                     a, b)
+        cost = analyze_text(c.as_text())
+        one = 2 * 256 ** 3
+        assert cost.flops > 1.8 * one     # two backward matmuls
+
+
+class TestBytes:
+    def test_matmul_bytes_reasonable(self):
+        a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+        c = _compile(lambda a, b: a @ b, a, a)
+        cost = analyze_text(c.as_text())
+        minimum = 3 * 1024 * 1024 * 4
+        assert minimum <= cost.bytes <= 4 * minimum
+
+
+@pytest.mark.skipif(len(jax.devices()) != 1, reason="single-device test run")
+class TestRooflineTerms:
+    def test_bottleneck_selection(self):
+        r = Roofline(flops=197e12, hbm_bytes=1e9, coll_bytes=0,
+                     coll_by_kind={})
+        assert r.bottleneck == "compute"
+        assert abs(r.t_compute - 1.0) < 1e-9
+        r2 = Roofline(flops=1e12, hbm_bytes=819e9 * 2, coll_bytes=0,
+                      coll_by_kind={})
+        assert r2.bottleneck == "memory"
+        r3 = Roofline(flops=0, hbm_bytes=0, coll_bytes=LINK_BW * 3,
+                      coll_by_kind={})
+        assert abs(r3.t_collective - 3.0) < 1e-9
