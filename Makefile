@@ -1,0 +1,17 @@
+# One-command entry points.  PYTHONPATH is prepended so the src/ layout
+# works without an editable install.
+PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
+
+.PHONY: test smoke bench
+
+# tier-1 verify (ROADMAP.md)
+test:
+	$(PY) -m pytest -x -q
+
+# tier-1 + a ~10-second online-runtime benchmark: the fast reproducibility gate
+smoke: test
+	$(PY) -m benchmarks.runtime_throughput --fast
+
+# the full benchmark harness (paper tables/figures + runtime)
+bench:
+	$(PY) -m benchmarks.run

@@ -45,6 +45,19 @@ def main() -> None:
     summary.append(("fig4_variability", dt * 1e6 / max(len(lines), 1),
                     f"max_rel_iqr={max_iqr:.4f}"))
 
+    from benchmarks import runtime_throughput
+    t0 = time.time()
+    lines = runtime_throughput.main(n_tasks=1600 if full else 160)
+    dt = time.time() - t0
+    _block("Runtime: online policies x arrival scenarios", lines)
+    rows = {tuple(l.split(",")[:2]): l.split(",") for l in lines[1:]}
+    skew_lq = float(rows[("skewed", "locality")][3])
+    pen_lq = float(rows[("skewed", "locality")][5])
+    pen_ad = float(rows[("skewed", "adaptive")][5])
+    summary.append(("runtime_throughput", dt * 1e6 / max(len(lines), 1),
+                    f"skew_lq_local={skew_lq:.2f},"
+                    f"adapt_penalty_save={1 - pen_ad / max(pen_lq, 1):.2f}"))
+
     from benchmarks import table1_stream
     t0 = time.time()
     lines = table1_stream.main()

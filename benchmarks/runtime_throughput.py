@@ -1,0 +1,111 @@
+"""Online runtime throughput: scheduling policies x arrival scenarios.
+
+    PYTHONPATH=src python -m benchmarks.runtime_throughput [--fast]
+
+Drives the ``repro.runtime`` executor with three arrival patterns and four
+policies and reports the locality/balance trade-off each policy strikes —
+the online analogue of the paper's Fig. 3 policy comparison:
+
+  policies
+    static    — route to home, never steal (OpenMP ``schedule(static)``:
+                pure locality, imbalance shows up as idle polls / steps)
+    tasking   — round-robin routing, greedy stealing (plain OpenMP tasking:
+                balanced, locality accidental ≈ 1/num_domains)
+    locality  — route to home, greedy cyclic stealing (the paper's §2.2
+                locality queues: balance over locality)
+    adaptive  — route to home, depth-thresholded stealing tracking the steal
+                penalty (``runtime.AdaptiveSteal``, beyond the paper)
+
+  scenarios (task homes + arrival cadence; identical streams per policy)
+    uniform   — homes uniform over domains, steady arrivals
+    bursty    — large synchronized bursts separated by idle rounds
+    skewed    — 80% of tasks homed on domain 0 (one hot replica/socket)
+
+Each stolen task pays an abstract nonlocal penalty (STEAL_PENALTY cost
+units ≈ a prefix re-prefill); ``steps`` is the number of scheduling rounds
+until drained (the discrete makespan proxy).
+
+CSV: scenario,policy,tasks,local_frac,steal_frac,steal_penalty,idle_polls,steps
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+NUM_DOMAINS = 4
+STEAL_PENALTY = 4.0           # cost units per stolen task (local cost = 1)
+
+
+def _scenarios(n_tasks: int, seed: int):
+    """name -> list of per-round arrival batches, each a list of home tags
+    (an empty batch is an idle round)."""
+    rng = np.random.default_rng(seed)
+
+    def uniform():
+        homes = rng.integers(0, NUM_DOMAINS, n_tasks)
+        return [list(homes[i:i + 8]) for i in range(0, n_tasks, 8)]
+
+    def bursty():
+        homes = rng.integers(0, NUM_DOMAINS, n_tasks)
+        waves = []
+        for i in range(0, n_tasks, 64):
+            waves.append(list(homes[i:i + 64]))
+            waves.extend([[]] * 6)           # idle rounds between bursts
+        return waves
+
+    def skewed():
+        hot = rng.random(n_tasks) < 0.8
+        homes = np.where(hot, 0, rng.integers(0, NUM_DOMAINS, n_tasks))
+        return [list(homes[i:i + 8]) for i in range(0, n_tasks, 8)]
+
+    return {"uniform": uniform(), "bursty": bursty(), "skewed": skewed()}
+
+
+def _policies():
+    from repro.runtime import AdaptiveSteal, GreedySteal, NoSteal
+
+    # name -> (route_by_home, governor factory)
+    return {
+        "static": (True, NoSteal),
+        "tasking": (False, GreedySteal),
+        "locality": (True, GreedySteal),
+        "adaptive": (True, lambda: AdaptiveSteal(penalty_hint=STEAL_PENALTY)),
+    }
+
+
+def _drive(waves, route_by_home: bool, governor, seed: int):
+    from repro.runtime import Executor
+
+    ex = Executor(NUM_DOMAINS, governor=governor, steal_order="cyclic",
+                  steal_penalty=lambda task, worker: STEAL_PENALTY,
+                  seed=seed, record_events=False)
+    for batch in waves:
+        for home in batch:
+            task = ex.make_task(home=int(home))
+            ex.submit(task, domain=None if route_by_home
+                      else ex.next_round_robin())
+        ex.step()
+    ex.run_until_drained()
+    return ex
+
+
+def main(n_tasks: int = 400, seed: int = 0) -> list[str]:
+    lines = ["scenario,policy,tasks,local_frac,steal_frac,steal_penalty,"
+             "idle_polls,steps"]
+    for scen_name, waves in _scenarios(n_tasks, seed).items():
+        for pol_name, (route_by_home, gov_factory) in _policies().items():
+            ex = _drive(waves, route_by_home, gov_factory(), seed)
+            s = ex.stats
+            assert s.executed == n_tasks, (scen_name, pol_name, s.executed)
+            lines.append(
+                f"{scen_name},{pol_name},{s.executed},"
+                f"{s.local_fraction:.3f},{s.steal_fraction:.3f},"
+                f"{s.steal_penalty:.0f},{s.idle_polls},{ex.step_count}")
+    return lines
+
+
+if __name__ == "__main__":
+    fast = "--fast" in sys.argv
+    for ln in main(n_tasks=160 if fast else 400):
+        print(ln)

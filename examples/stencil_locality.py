@@ -22,7 +22,7 @@ from repro.kernels.jacobi.ref import jacobi_sweep_ref
 from repro.roofline.hlo_cost import analyze_text
 from repro.stencil.jacobi import (JacobiGridConfig, make_contiguous_sweep,
                                   make_scattered_sweep, reassemble_scattered,
-                                  scatter_lattice)
+                                  run_runtime_sweep, scatter_lattice)
 
 N_DEV = 8
 
@@ -59,10 +59,18 @@ def main():
         coll_s = sum(analyze_text(
             scat.lower(fs2, c).compile().as_text()).coll.values())
 
+    # the same sweep as *online* runtime tasks: slabs homed contiguously on
+    # 4 domains, scheduled by the paper's locality queues (repro.runtime)
+    out_rt, rt = run_runtime_sweep(np.asarray(f), di=10, num_domains=4,
+                                   workers_per_domain=2)
+    err_r = float(np.max(np.abs(out_rt - np.asarray(ref))))
+
     print(f"contiguous (locality) : err={err_c:.1e} "
           f"collective={coll_c/1024:.0f} KiB/dev")
     print(f"scattered (oblivious) : err={err_s:.1e} "
           f"collective={coll_s/1024:.0f} KiB/dev")
+    print(f"runtime    (online)   : err={err_r:.1e} "
+          f"local={rt.local_fraction:.0%} steals={rt.stolen}")
     print(f"-> locality schedule moves {coll_s/max(coll_c,1):.0f}x fewer "
           f"bytes across domains for the same answer")
 

@@ -1,52 +1,34 @@
-"""Locality queues (paper §2.2).
+"""Locality queues (paper §2.2) — simulator-facing shim.
 
-One FIFO queue per locality domain.  ``enqueue`` sorts a block into the queue
-of its home domain; ``dequeue(ld)`` serves the oldest block of the caller's
-own domain, falling back to scanning the other queues ("work stealing") —
-load balance is deliberately given priority over strict locality.
+The canonical implementation of the per-domain FIFO queues and the cyclic
+steal scan lives in ``repro.runtime.queues.DomainQueues`` (the online
+runtime); this class only preserves the simulator's historical interface,
+where items are integer block ids and ``dequeue`` returns a plain
+``(block_idx, stolen)`` pair.
 
-In the paper each queue is a ``std::queue`` protected by an OpenMP lock (or a
-``tbb::concurrent_queue``); here the structure is single-threaded and driven
-by the discrete-event simulator, so plain deques suffice.  The *semantics*
-(FIFO per domain, cyclic steal scan starting after the local domain) are
-preserved exactly.
+The *semantics* are the paper's exactly: FIFO per locality domain, local
+queue served first, cyclic steal scan starting right after the caller's
+own domain — load balance is deliberately given priority over strict
+locality.
 """
 from __future__ import annotations
 
-from collections import deque
 from typing import Optional
 
+from ..runtime.queues import DomainQueues
 
-class LocalityQueues:
-    """Per-LD FIFO queues with a cyclic steal scan."""
+
+class LocalityQueues(DomainQueues):
+    """Per-LD FIFO queues with a cyclic steal scan (thin runtime shim)."""
 
     def __init__(self, num_domains: int):
-        self.num_domains = num_domains
-        self._queues: list[deque[int]] = [deque() for _ in range(num_domains)]
-        self._size = 0
+        super().__init__(num_domains, steal_order="cyclic")
 
-    def enqueue(self, block_idx: int, ld_home: int) -> None:
-        self._queues[ld_home].append(block_idx)
-        self._size += 1
-
-    def dequeue(self, ld: int) -> Optional[tuple[int, bool]]:
+    def dequeue(self, ld: int) -> Optional[tuple[int, bool]]:  # type: ignore[override]
         """Pop the oldest block for domain ``ld``; steal cyclically otherwise.
 
         Returns ``(block_idx, stolen)`` or ``None`` if every queue is empty.
         ``stolen`` is True when the block came from a foreign queue.
         """
-        if self._queues[ld]:
-            self._size -= 1
-            return self._queues[ld].popleft(), False
-        for off in range(1, self.num_domains):
-            victim = (ld + off) % self.num_domains
-            if self._queues[victim]:
-                self._size -= 1
-                return self._queues[victim].popleft(), True
-        return None
-
-    def __len__(self) -> int:
-        return self._size
-
-    def queue_sizes(self) -> list[int]:
-        return [len(q) for q in self._queues]
+        got = super().dequeue(ld)
+        return None if got is None else (got.item, got.stolen)

@@ -1,5 +1,10 @@
 """Scheduling policies of the paper, as pluggable simulator drivers.
 
+The queue and pool machinery (per-LD FIFO queues, the cyclic steal scan,
+the bounded submission pool) lives in ``repro.runtime``; these policies
+are thin offline drivers that feed those primitives from the
+discrete-event simulator.
+
 Every policy answers two questions for the discrete-event simulator:
   * submitter side — does a single thread feed a bounded task pool
     (OpenMP tasking semantics, §2.1), and what does one ``submit_one`` do?
@@ -33,7 +38,7 @@ from typing import Optional
 
 import numpy as np
 
-from .queues import LocalityQueues
+from ..runtime.queues import DomainQueues, SubmissionPool
 from .tasks import BlockGrid
 from .topology import MachineTopology
 
@@ -107,7 +112,7 @@ class OpenMPTasking(Policy):
 
     def reset(self, grid, homes, topo, thread_ld, rng):
         self._pending = deque(int(b) for b in grid.submit_order(self.submit_order))
-        self._pool: deque[int] = deque()
+        self._pool = SubmissionPool(self.pool_cap)
 
     def has_unsubmitted(self):
         return bool(self._pending)
@@ -116,12 +121,11 @@ class OpenMPTasking(Policy):
         return len(self._pool)
 
     def submit_one(self):
-        self._pool.append(self._pending.popleft())
+        self._pool.push(self._pending.popleft())
 
     def pop(self, thread):
-        if self._pool:
-            return PopResult(self._pool.popleft())
-        return None
+        blk = self._pool.pop()
+        return None if blk is None else PopResult(blk)
 
 
 class OpenMPLocalityQueues(Policy):
@@ -137,31 +141,27 @@ class OpenMPLocalityQueues(Policy):
     def reset(self, grid, homes, topo, thread_ld, rng):
         self._pending = deque(int(b) for b in grid.submit_order(self.submit_order))
         self._homes = homes
-        self._queues = LocalityQueues(topo.num_domains)
-        self._tokens = 0           # generic tasks waiting in the OpenMP pool
+        self._queues = DomainQueues(topo.num_domains, steal_order="cyclic")
         self._thread_ld = thread_ld
 
     def has_unsubmitted(self):
         return bool(self._pending)
 
     def pool_size(self):
-        return self._tokens
+        # One generic pool task per enqueued block (a task may run "ahead" of
+        # its own submission, which the paper notes is harmless), so the pool
+        # occupancy equals the queued-block count.
+        return len(self._queues)
 
     def submit_one(self):
         blk = self._pending.popleft()
         self._queues.enqueue(blk, int(self._homes[blk]))
-        self._tokens += 1
 
     def pop(self, thread):
-        if self._tokens == 0:
-            return None
         got = self._queues.dequeue(int(self._thread_ld[thread]))
-        # Invariant: one pool token per enqueued block ⇒ tokens>0 implies a
-        # nonempty queue exists (a task may run "ahead" of its own submission,
-        # which the paper notes is harmless).
-        assert got is not None
-        self._tokens -= 1
-        return PopResult(got[0], stolen=got[1])
+        if got is None:
+            return None
+        return PopResult(got.item, stolen=got.stolen)
 
 
 class TBBParallelFor(Policy):
@@ -212,7 +212,7 @@ class TBBLocalityQueues(Policy):
     name = "tbb_lq"
 
     def reset(self, grid, homes, topo, thread_ld, rng):
-        self._queues = LocalityQueues(topo.num_domains)
+        self._queues = DomainQueues(topo.num_domains, steal_order="cyclic")
         order = rng.permutation(grid.num_blocks)   # uncontrolled availability
         for blk in order:
             self._queues.enqueue(int(blk), int(homes[blk]))
@@ -222,7 +222,7 @@ class TBBLocalityQueues(Policy):
         got = self._queues.dequeue(int(self._thread_ld[thread]))
         if got is None:
             return None
-        return PopResult(got[0], stolen=got[1])
+        return PopResult(got.item, stolen=got.stolen)
 
 
 def tbb_first_touch(grid: BlockGrid, topo: MachineTopology,

@@ -1,0 +1,99 @@
+"""Steal governors: when is a worker allowed to steal?
+
+The paper's answer is "always" — load balance strictly dominates locality
+(§2.2), which is right for its memory-bound stencil where a steal costs a
+bounded nonlocal-bandwidth penalty.  Online workloads (the serving engine)
+can have much steeper steal penalties (a full prefix re-prefill), so the
+runtime makes the decision pluggable:
+
+  ``GreedySteal``   — the paper's behaviour: any nonempty victim is fair game.
+  ``NoSteal``       — never steal (models ``schedule(static)`` worksharing:
+                      pure locality, no balancing).
+  ``AdaptiveSteal`` — queue-depth-driven throttling (beyond the paper, toward
+                      the roadmap): steal only from victims whose backlog is
+                      at least a threshold θ that tracks the observed steal
+                      penalty, and decay θ while a worker idles so balance
+                      still wins in the limit — the paper's balance-over-
+                      locality ordering is preserved, just delayed until the
+                      expected payoff covers the penalty.
+
+Governors see only queue depths and their own steal/idle history, never task
+contents — they compose with any ``DomainQueues`` steal order.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Optional
+
+from .workers import Worker
+
+
+class StealGovernor:
+    """Base contract: a minimum victim depth per dequeue attempt."""
+
+    def min_victim_depth(self, worker: Worker) -> Optional[int]:
+        """Victims need at least this many queued tasks to be stolen from;
+        ``None`` forbids stealing entirely for this attempt."""
+        return 1
+
+    def on_idle(self, worker: Worker) -> None:
+        """Called when ``worker`` polled and found nothing it may take."""
+
+    def on_execute(self, worker: Worker, stolen: bool, penalty: float) -> None:
+        """Called after ``worker`` executed a task."""
+
+
+class GreedySteal(StealGovernor):
+    """The paper's §2.2 policy: steal whenever the local queue is dry."""
+
+
+class NoSteal(StealGovernor):
+    """Pure locality — workers only ever serve their own domain."""
+
+    def min_victim_depth(self, worker: Worker) -> Optional[int]:
+        return None
+
+
+class AdaptiveSteal(StealGovernor):
+    """Depth-thresholded stealing with an online penalty estimate.
+
+    θ = clamp(round(penalty_estimate / task_cost), 1, max_threshold): a steal
+    is worthwhile when the victim's backlog is deep enough that helping out
+    beats the nonlocal penalty.  Each consecutive idle poll lowers a worker's
+    effective θ by one (floor 1), so a starved worker always steals
+    eventually — progress is guaranteed and the throttle only reorders work.
+    The penalty estimate starts at ``penalty_hint`` and follows observed
+    steal penalties by an exponential moving average.
+    """
+
+    def __init__(self, penalty_hint: float = 4.0, task_cost: float = 1.0,
+                 ema: float = 0.2, max_threshold: int = 64):
+        if task_cost <= 0:
+            raise ValueError("task_cost must be positive")
+        if not 0.0 < ema <= 1.0:
+            raise ValueError("ema must be in (0, 1]")
+        self.task_cost = task_cost
+        self.ema = ema
+        self.max_threshold = max_threshold
+        self._penalty = float(penalty_hint)
+        self._idle: defaultdict[int, int] = defaultdict(int)
+
+    @property
+    def threshold(self) -> int:
+        return min(max(round(self._penalty / self.task_cost), 1),
+                   self.max_threshold)
+
+    @property
+    def penalty_estimate(self) -> float:
+        return self._penalty
+
+    def min_victim_depth(self, worker: Worker) -> Optional[int]:
+        return max(self.threshold - self._idle[worker.wid], 1)
+
+    def on_idle(self, worker: Worker) -> None:
+        self._idle[worker.wid] += 1
+
+    def on_execute(self, worker: Worker, stolen: bool, penalty: float) -> None:
+        self._idle[worker.wid] = 0
+        if stolen:
+            self._penalty = (1 - self.ema) * self._penalty + self.ema * penalty

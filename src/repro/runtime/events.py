@@ -1,0 +1,65 @@
+"""Streaming event trace for the runtime.
+
+Every scheduling decision emits one ``Event``; the ``EventLog`` is a bounded
+ring buffer so long-running (online) executors can keep tracing without
+growing memory.  Events are the raw material for the metrics layer and for
+offline debugging of steal behaviour — the online analogue of the
+per-thread timelines behind the paper's Fig. 4 variability analysis.
+
+Event kinds:
+  ``submit``  — a task entered a domain queue
+  ``run``     — a worker executed a task from its own domain's queue
+  ``steal``   — a worker executed a task taken from a foreign queue
+  ``inline``  — the submitter executed a task because the pool was full
+                (OpenMP §2.1 backpressure)
+  ``idle``    — a worker polled for work and found none it may take
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter, deque
+from typing import Iterator
+
+KINDS = ("submit", "run", "steal", "inline", "idle")
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    step: int          # executor scheduling round (0 for submissions)
+    kind: str
+    worker: int        # worker id, -1 for submit events
+    domain: int        # queue domain acted on
+    task_uid: int      # -1 for idle polls
+    src_domain: int = -1   # for steals: the victim queue
+
+
+class EventLog:
+    """Bounded ring buffer of events (oldest dropped first)."""
+
+    def __init__(self, maxlen: int = 65536):
+        self._buf: deque[Event] = deque(maxlen=maxlen)
+        self._counts: Counter[str] = Counter()
+
+    def emit(self, step: int, kind: str, worker: int, domain: int,
+             task_uid: int, src_domain: int = -1) -> None:
+        self._buf.append(Event(step, kind, worker, domain, task_uid, src_domain))
+        self._counts[kind] += 1
+
+    def counts(self) -> dict[str, int]:
+        """Totals per kind over the whole run (not just the retained window)."""
+        return dict(self._counts)
+
+    def tail(self, n: int = 50) -> list[Event]:
+        return list(self._buf)[-n:]
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def __iter__(self) -> Iterator[Event]:
+        return iter(self._buf)
+
+    def to_csv_lines(self) -> list[str]:
+        out = ["step,kind,worker,domain,task_uid,src_domain"]
+        out += [f"{e.step},{e.kind},{e.worker},{e.domain},{e.task_uid},"
+                f"{e.src_domain}" for e in self._buf]
+        return out

@@ -1,0 +1,216 @@
+"""The online locality-aware task executor.
+
+``Executor`` is the generic, online form of the paper's scheduling layer:
+tasks arrive dynamically (``submit``), are sorted into per-domain FIFO
+queues by their locality tag, and a team of domain-pinned workers serves
+them local-first with a pluggable steal scan and steal governor.  The
+bounded submission pool reproduces OpenMP tasking semantics (§2.1): when
+the pool is full the submitter executes queued tasks itself before
+enqueueing more, so in-flight work never exceeds ``pool_cap``.
+
+Workers are stepped cooperatively in a fixed round-robin order, which makes
+every run deterministic for a given seed — the repo-wide discrete stand-in
+for parallel threads (ordering, not timing, is what scheduling controls).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from .adaptive import GreedySteal, StealGovernor
+from .events import EventLog
+from .metrics import MetricsRecorder
+from .queues import DomainQueues
+from .workers import Worker, WorkerPool
+
+
+@dataclasses.dataclass
+class Task:
+    """One unit of work: an opaque payload plus its locality tag.
+
+    ``home`` is the domain whose memory holds the task's data (page
+    placement in the paper, KV-cache residency in serving); -1 means the
+    task has no affinity anywhere yet ("first touch" happens on execution).
+    ``cost`` is an abstract local execution cost used by governors and
+    benchmarks, not a wall-clock promise.
+    """
+
+    uid: int
+    payload: Any = None
+    home: int = -1
+    cost: float = 1.0
+
+
+Handler = Callable[[Task, Worker], Any]
+PenaltyFn = Callable[[Task, Worker], float]
+
+
+def _default_handler(task: Task, worker: Worker) -> Any:
+    return task.payload(worker) if callable(task.payload) else task.payload
+
+
+class Executor:
+    """Online multi-worker executor over per-domain locality queues.
+
+    Parameters
+    ----------
+    num_domains:        number of locality domains (queues).
+    worker_domains:     domain of each worker, in wid order; defaults to one
+                        worker per domain.  Every domain should be covered
+                        by a worker unless stealing can reach it.
+    handler:            ``(task, worker) -> result``; non-None results are
+                        collected and returned by ``run_until_drained``.
+                        Defaults to calling the payload if it is callable.
+    pool_cap:           bound on queued-but-unrun tasks (§2.1); ``None``
+                        disables backpressure.
+    steal_order:        "cyclic" (paper §2.2), "longest", or "random".
+    governor:           a ``StealGovernor``; default ``GreedySteal``.
+    steal_penalty:      ``(task, worker) -> cost`` charged on steals (e.g.
+                        re-prefill tokens); accounted in the metrics.
+    seed:               drives the executor's RNG (used by random stealing).
+    """
+
+    def __init__(self, num_domains: int,
+                 worker_domains: Sequence[int] | None = None, *,
+                 handler: Handler | None = None,
+                 pool_cap: Optional[int] = 256,
+                 steal_order: str = "cyclic",
+                 governor: StealGovernor | None = None,
+                 steal_penalty: PenaltyFn | None = None,
+                 seed: int = 0,
+                 record_events: bool = True,
+                 event_maxlen: int = 65536):
+        self.num_domains = num_domains
+        self.rng = np.random.default_rng(seed)
+        self.queues = DomainQueues(num_domains, steal_order=steal_order,
+                                   rng=self.rng)
+        if worker_domains is None:
+            worker_domains = list(range(num_domains))
+        self.pool = WorkerPool(worker_domains)
+        for w in self.pool:
+            if not 0 <= w.domain < num_domains:
+                raise ValueError(f"{w!r} outside {num_domains} domains")
+        self.handler = handler or _default_handler
+        self.pool_cap = pool_cap
+        self.governor = governor or GreedySteal()
+        self.steal_penalty = steal_penalty
+        self.metrics = MetricsRecorder()
+        self.events = EventLog(event_maxlen) if record_events else None
+        self.results: list[Any] = []
+        self._uids = itertools.count()
+        self._rr = 0
+        self._step = 0
+
+    # -- submission side ----------------------------------------------------
+    def make_task(self, payload: Any = None, home: int = -1,
+                  cost: float = 1.0) -> Task:
+        return Task(uid=next(self._uids), payload=payload, home=home, cost=cost)
+
+    def next_round_robin(self) -> int:
+        d = self._rr % self.num_domains
+        self._rr += 1
+        return d
+
+    def submit(self, task: Task, domain: int | None = None) -> None:
+        """Route ``task`` into a domain queue, applying backpressure.
+
+        ``domain=None`` routes to the task's home domain, or round-robin for
+        homeless tasks.  When the pool is full, the submitter executes
+        queued tasks inline (greedily, ignoring the governor — the §2.1
+        "submitting thread is used for processing tasks" rule) until a slot
+        frees up, so the pool bound is a hard invariant.
+        """
+        if domain is None:
+            domain = task.home if task.home >= 0 else self.next_round_robin()
+        if not 0 <= domain < self.num_domains:
+            raise ValueError(f"domain {domain} out of range")
+        while self.pool_cap is not None and len(self.queues) >= self.pool_cap:
+            if not self._attempt(self.pool[0], inline=True):
+                break
+        self.queues.enqueue(task, domain)
+        self.metrics.on_submit(len(self.queues))
+        self._emit("submit", worker=-1, domain=domain, task_uid=task.uid)
+
+    # -- execution side -----------------------------------------------------
+    def step(self) -> int:
+        """One scheduling round: every worker attempts one task.  Returns
+        the number of tasks executed.  Interleave with ``submit`` for
+        online (arrival-driven) operation."""
+        self._step += 1
+        n = sum(1 for w in self.pool if self._attempt(w))
+        self.metrics.sample_depths(self._step, self.queues.queue_sizes())
+        return n
+
+    def run_until_drained(self) -> list[Any]:
+        """Step until all queues are empty; returns (and clears) the
+        accumulated non-None handler results, in completion order."""
+        stalled = 0
+        while len(self.queues):
+            if self.step() == 0:
+                stalled += 1
+                if stalled > 10_000:
+                    raise RuntimeError(
+                        "executor stalled: tasks queued in domains no worker "
+                        f"may serve (sizes={self.queues.queue_sizes()}, "
+                        f"workers={[w.domain for w in self.pool]})")
+            else:
+                stalled = 0
+        out, self.results = self.results, []
+        return out
+
+    def _attempt(self, worker: Worker, inline: bool = False) -> bool:
+        if inline:
+            got = self.queues.dequeue(worker.domain)
+        else:
+            mv = self.governor.min_victim_depth(worker)
+            if mv is None:
+                got = self.queues.dequeue(worker.domain, allow_steal=False)
+            else:
+                got = self.queues.dequeue(worker.domain, min_victim=mv)
+        if got is None:
+            worker.stats.idle_polls += 1
+            self.metrics.on_idle()
+            self.governor.on_idle(worker)
+            self._emit("idle", worker=worker.wid, domain=worker.domain,
+                       task_uid=-1)
+            return False
+        task: Task = got.item
+        stolen = got.stolen
+        local = not stolen and task.home == worker.domain
+        penalty = 0.0
+        if stolen and self.steal_penalty is not None:
+            penalty = float(self.steal_penalty(task, worker))
+        result = self.handler(task, worker)
+        worker.stats.executed += 1
+        worker.stats.local += int(local)
+        worker.stats.stolen += int(stolen)
+        self.metrics.on_execute(local, stolen, penalty, inline)
+        self.governor.on_execute(worker, stolen, penalty)
+        kind = "inline" if inline else ("steal" if stolen else "run")
+        self._emit(kind, worker=worker.wid, domain=worker.domain,
+                   task_uid=task.uid, src_domain=got.domain)
+        if result is not None:
+            self.results.append(result)
+        return True
+
+    def _emit(self, kind: str, worker: int, domain: int, task_uid: int,
+              src_domain: int = -1) -> None:
+        if self.events is not None:
+            self.events.emit(self._step, kind, worker, domain, task_uid,
+                             src_domain)
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def stats(self):
+        return self.metrics.stats
+
+    @property
+    def step_count(self) -> int:
+        """Scheduling rounds run so far — the discrete makespan proxy."""
+        return self._step
+
+    def __len__(self) -> int:
+        return len(self.queues)

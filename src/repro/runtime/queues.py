@@ -1,0 +1,143 @@
+"""Canonical queue primitives of the locality-queue runtime.
+
+``DomainQueues`` is the single implementation of the paper's §2.2 data
+structure in this repo: one FIFO queue per locality domain, local-first
+dequeue, and a steal scan over foreign queues when the local queue is dry
+(balance deliberately wins over locality).  Both the offline simulator
+policies (`repro.core.scheduler`) and the online serving router
+(`repro.serving.engine`) route through this class — there is no second
+copy of the steal-scan logic anywhere.
+
+Three steal scans are supported:
+
+  ``cyclic``   — the paper's scan: victims visited in domain order starting
+                 right after the caller's own domain (§2.2).
+  ``longest``  — steal from the deepest foreign queue (the serving router's
+                 balance-first variant; ties break on lowest domain id).
+  ``random``   — uniform random victim among eligible queues (models TBB's
+                 random stealing, §3.1); requires an ``rng``.
+
+``SubmissionPool`` captures the other half of the paper's machinery: the
+bounded FIFO pool of submitted-but-unconsumed tasks of OpenMP tasking
+(§2.1, "the limit is set to roughly 256 tasks").  The cap is advisory —
+callers consult ``full``/``free_slots`` and apply backpressure themselves
+(the simulator has its submitter run a task when full; the online
+``Executor`` does the same inline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Popped:
+    """Result of a ``DomainQueues.dequeue``."""
+
+    item: Any
+    domain: int        # queue the item came from
+    stolen: bool       # True when it came from a foreign queue
+
+
+class DomainQueues:
+    """Per-domain FIFO queues with a local-first dequeue and a steal scan."""
+
+    STEAL_ORDERS = ("cyclic", "longest", "random")
+
+    def __init__(self, num_domains: int, steal_order: str = "cyclic",
+                 rng: np.random.Generator | None = None):
+        if num_domains < 1:
+            raise ValueError("need at least one domain")
+        if steal_order not in self.STEAL_ORDERS:
+            raise ValueError(f"unknown steal order {steal_order!r} "
+                             f"(want one of {self.STEAL_ORDERS})")
+        if steal_order == "random" and rng is None:
+            raise ValueError("steal_order='random' needs an rng")
+        self.num_domains = num_domains
+        self.steal_order = steal_order
+        self._rng = rng
+        self._queues: list[deque[Any]] = [deque() for _ in range(num_domains)]
+        self._size = 0
+
+    # -- producer side -----------------------------------------------------
+    def enqueue(self, item: Any, domain: int) -> None:
+        self._queues[domain].append(item)
+        self._size += 1
+
+    # -- consumer side -----------------------------------------------------
+    def dequeue(self, domain: int, *, allow_steal: bool = True,
+                min_victim: int = 1) -> Optional[Popped]:
+        """Pop the oldest local item; steal from a foreign queue otherwise.
+
+        ``min_victim`` throttles stealing: only victims holding at least
+        that many items are eligible (1 = the paper's greedy behaviour;
+        larger values are the adaptive governor's depth threshold).
+        """
+        if self._queues[domain]:
+            self._size -= 1
+            return Popped(self._queues[domain].popleft(), domain, False)
+        if not allow_steal:
+            return None
+        victim = self._pick_victim(domain, max(min_victim, 1))
+        if victim is None:
+            return None
+        self._size -= 1
+        return Popped(self._queues[victim].popleft(), victim, True)
+
+    def _pick_victim(self, domain: int, min_victim: int) -> Optional[int]:
+        if self.steal_order == "cyclic":
+            for off in range(1, self.num_domains):
+                d = (domain + off) % self.num_domains
+                if len(self._queues[d]) >= min_victim:
+                    return d
+            return None
+        eligible = [d for d in range(self.num_domains)
+                    if d != domain and len(self._queues[d]) >= min_victim]
+        if not eligible:
+            return None
+        if self.steal_order == "longest":
+            return max(eligible, key=lambda d: (len(self._queues[d]), -d))
+        return int(eligible[int(self._rng.integers(len(eligible)))])
+
+    # -- introspection -----------------------------------------------------
+    def __len__(self) -> int:
+        return self._size
+
+    def queue_sizes(self) -> list[int]:
+        return [len(q) for q in self._queues]
+
+    def depth(self, domain: int) -> int:
+        return len(self._queues[domain])
+
+
+class SubmissionPool:
+    """Bounded FIFO of submitted-but-unconsumed tasks (OpenMP §2.1).
+
+    The cap is advisory: ``push`` never drops, but producers are expected
+    to check ``full`` and switch to consuming (the paper's "the submitting
+    thread is used for processing tasks for some time").
+    """
+
+    def __init__(self, cap: int = 256):
+        self.cap = cap
+        self._fifo: deque[Any] = deque()
+
+    def push(self, item: Any) -> None:
+        self._fifo.append(item)
+
+    def pop(self) -> Optional[Any]:
+        return self._fifo.popleft() if self._fifo else None
+
+    def __len__(self) -> int:
+        return len(self._fifo)
+
+    @property
+    def full(self) -> bool:
+        return len(self._fifo) >= self.cap
+
+    @property
+    def free_slots(self) -> int:
+        return max(self.cap - len(self._fifo), 0)

@@ -1,18 +1,27 @@
-"""Serving engine: continuous batching with a locality-queue request router.
+"""Serving engine: continuous batching on the locality-aware runtime.
 
 This is the substrate where the paper's scheduler survives as a genuinely
 *on-line* component on TPU: requests arrive dynamically, and replicas (model
 instances on device slices) race to serve them — exactly the OpenMP
-consumer-thread picture.  The router is the paper's §2.2 layer verbatim:
+consumer-thread picture.  The router is a ``repro.runtime.Executor`` with
+replicas as locality domains:
 
   * each request carries a locality tag = the replica holding its KV/prefix
     cache (requests in a multi-turn session are "first-touched" by the
-    replica that prefilled them);
+    replica that prefilled them) — the runtime ``Task.home``;
   * one FIFO queue per replica; a free replica serves its own queue first
     and steals from the longest foreign queue otherwise (balance over
-    locality, §2.2);
+    locality, §2.2) — ``DomainQueues(steal_order="longest")``;
   * a stolen request pays a "page migration": its prefix must be re-prefilled
-    on the stealing replica (the nonlocal-access penalty).
+    on the stealing replica (the nonlocal-access penalty) — the runtime's
+    ``steal_penalty`` account.
+
+Routing policies:
+  ``locality``     — route to the home replica's queue (homeless requests
+                     round-robin); the paper's layer.
+  ``round_robin``  — ignore homes on submit; queues + stealing still apply.
+  ``single_queue`` — one shared FIFO (a single locality domain): replicas
+                     take work in arrival order, locality is accidental.
 
 The engine runs the real model (prefill + decode steps) for every request;
 tests/test_serving.py checks the outputs are identical under every routing
@@ -21,7 +30,6 @@ policy while the steal/local statistics differ as the paper predicts.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Any, Optional
 
 import jax
@@ -29,6 +37,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.model import Model
+from ..runtime import Executor, Task, Worker
+
+POLICIES = ("locality", "round_robin", "single_queue")
 
 
 @dataclasses.dataclass
@@ -79,73 +90,79 @@ class Replica:
         return req
 
 
-class LocalityRouter:
-    """Per-replica queues + steal — the paper's locality queues, on-line."""
-
-    def __init__(self, num_replicas: int, policy: str = "locality"):
-        if policy not in ("locality", "round_robin", "single_queue"):
-            raise ValueError(policy)
-        self.n = num_replicas
-        self.policy = policy
-        self.queues: list[deque[Request]] = [deque() for _ in range(num_replicas)]
-        self._rr = 0
-
-    def submit(self, req: Request) -> None:
-        if self.policy == "single_queue":
-            self.queues[0].append(req)
-        elif self.policy == "round_robin" or req.home_replica < 0:
-            self.queues[self._rr % self.n].append(req)
-            self._rr += 1
-        else:
-            self.queues[req.home_replica].append(req)
-
-    def next_for(self, replica: int) -> Optional[tuple[Request, bool]]:
-        """(request, stolen) for a free replica; local queue first, then the
-        longest foreign queue (balance over locality, paper §2.2)."""
-        if self.policy == "single_queue":
-            return (self.queues[0].popleft(), False) if self.queues[0] else None
-        if self.queues[replica]:
-            return self.queues[replica].popleft(), False
-        victims = sorted(range(self.n), key=lambda i: -len(self.queues[i]))
-        for v in victims:
-            if v != replica and self.queues[v]:
-                return self.queues[v].popleft(), True
-        return None
-
-    def pending(self) -> int:
-        return sum(len(q) for q in self.queues)
-
-
 class ServingEngine:
+    """Replicas as locality domains over a ``runtime.Executor``."""
+
     def __init__(self, model: Model, params: Any, num_replicas: int = 2,
-                 max_seq: int = 128, policy: str = "locality"):
+                 max_seq: int = 128, policy: str = "locality",
+                 pool_cap: Optional[int] = 256):
+        if policy not in POLICIES:
+            raise ValueError(policy)
+        self.policy = policy
         self.replicas = [Replica(model, params, max_seq)
                          for _ in range(num_replicas)]
-        self.router = LocalityRouter(num_replicas, policy)
-        self.stats = ServeStats()
+        # single_queue = one shared locality domain every replica serves;
+        # otherwise one domain per replica (worker wid == replica index).
+        num_domains = 1 if policy == "single_queue" else num_replicas
+        worker_domains = ([0] * num_replicas if policy == "single_queue"
+                          else list(range(num_replicas)))
+        self._exec = Executor(
+            num_domains, worker_domains,
+            handler=self._run_request,
+            steal_order="longest",
+            steal_penalty=self._steal_penalty,
+            pool_cap=pool_cap,
+        )
+        self._prefill_base = 0      # first-prefill tokens of served requests
+        self._accidental_local = 0  # served by home replica, any routing
 
+    # -- runtime callbacks ---------------------------------------------------
+    def _steal_penalty(self, task: Task, worker: Worker) -> float:
+        # nonlocal access: a cached prefix must be re-prefilled on the thief
+        req: Request = task.payload
+        return float(len(req.tokens)) if req.home_replica >= 0 else 0.0
+
+    def _run_request(self, task: Task, worker: Worker) -> Request:
+        req: Request = task.payload
+        self._prefill_base += len(req.tokens)
+        if req.home_replica == worker.wid:
+            self._accidental_local += 1
+        req.home_replica = worker.wid          # first touch / migration
+        return self.replicas[worker.wid].run(req)
+
+    # -- public API ----------------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.router.submit(req)
+        task = self._exec.make_task(payload=req, home=req.home_replica,
+                                    cost=float(len(req.tokens)))
+        if self.policy == "single_queue":
+            domain = 0
+        elif self.policy == "round_robin":
+            domain = self._exec.next_round_robin()
+        else:
+            domain = None        # Executor routes: home queue, else round-robin
+        self._exec.submit(task, domain=domain)
 
     def run_until_drained(self) -> list[Request]:
         """Round-robin replica stepping (a discrete stand-in for parallel
         replica workers — ordering, not timing, is what's under test)."""
-        done: list[Request] = []
-        while self.router.pending():
-            for ridx, rep in enumerate(self.replicas):
-                got = self.router.next_for(ridx)
-                if got is None:
-                    continue
-                req, stolen = got
-                if stolen and req.home_replica >= 0:
-                    # nonlocal access: prefix must be re-prefilled here
-                    self.stats.prefill_tokens += len(req.tokens)
-                self.stats.prefill_tokens += len(req.tokens)
-                self.stats.served += 1
-                if not stolen and req.home_replica == ridx:
-                    self.stats.local += 1
-                if stolen:
-                    self.stats.stolen += 1
-                req.home_replica = ridx          # first touch / migration
-                done.append(rep.run(req))
-        return done
+        return self._exec.run_until_drained()
+
+    @property
+    def runtime(self) -> Executor:
+        return self._exec
+
+    @property
+    def stats(self) -> ServeStats:
+        s = self._exec.stats
+        # single_queue collapses all replicas onto one domain, so the
+        # runtime's domain-based local counter can't see which replica
+        # served a request; accidental home hits are counted in the handler
+        # instead (there are no steals with a single domain to exclude).
+        local = (self._accidental_local if self.policy == "single_queue"
+                 else s.local)
+        return ServeStats(
+            served=s.executed,
+            local=local,
+            stolen=s.stolen,
+            prefill_tokens=self._prefill_base + int(s.steal_penalty),
+        )

@@ -35,7 +35,10 @@ class TestFlops:
         one = 2 * 512 * 1024 * 1024
         assert abs(cost.flops - 10 * one) / (10 * one) < 0.1
         # sanity: the built-in counter misses the multiplier
-        xla = c.cost_analysis()["flops"]
+        ca = c.cost_analysis()
+        if isinstance(ca, list):        # older jax wraps it in a list
+            ca = ca[0]
+        xla = ca["flops"]
         assert xla < 0.2 * cost.flops
 
     def test_nested_scan(self):

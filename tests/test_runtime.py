@@ -1,0 +1,233 @@
+"""Tests for the online runtime: queue primitives and the executor."""
+import numpy as np
+import pytest
+
+from repro.core import LocalityQueues
+from repro.runtime import (AdaptiveSteal, DomainQueues, Executor, NoSteal,
+                           SubmissionPool)
+
+
+class TestLocalityQueuesEdgeCases:
+    def test_steal_scan_wraparound_order(self):
+        # caller in LD 2 of 4; work only in LDs 0 and 3.  The cyclic scan
+        # starts right after the local domain: 3 -> 0 -> 1, so LD 3 is hit
+        # first even though LD 0 was filled first.
+        q = LocalityQueues(4)
+        q.enqueue(10, 0)
+        q.enqueue(30, 3)
+        blk, stolen = q.dequeue(2)
+        assert (blk, stolen) == (30, True)
+        blk, stolen = q.dequeue(2)
+        assert (blk, stolen) == (10, True)
+
+    def test_steal_scan_wraps_past_zero(self):
+        # caller in LD 1 of 3; scan order is 2 -> 0 (wraps past the end)
+        q = LocalityQueues(3)
+        q.enqueue(7, 0)
+        assert q.dequeue(1) == (7, True)
+
+    def test_dequeue_all_empty(self):
+        q = LocalityQueues(3)
+        for ld in range(3):
+            assert q.dequeue(ld) is None
+        assert len(q) == 0
+        # drained queues behave the same as never-filled ones
+        q.enqueue(1, 0)
+        assert q.dequeue(0) == (1, False)
+        assert q.dequeue(0) is None
+        assert len(q) == 0
+
+    def test_local_pop_preferred_and_fifo(self):
+        q = LocalityQueues(2)
+        for blk in (1, 2, 3):
+            q.enqueue(blk, 1)
+        q.enqueue(9, 0)
+        assert q.dequeue(1) == (1, False)       # FIFO within the LD
+        assert q.dequeue(1) == (2, False)
+        assert q.dequeue(0) == (9, False)       # local wins while nonempty
+        assert q.dequeue(0) == (3, True)
+
+    def test_sizes_consistent_under_interleaving(self):
+        rng = np.random.default_rng(42)
+        q = LocalityQueues(4)
+        live = 0
+        for step in range(500):
+            if rng.random() < 0.55:
+                q.enqueue(step, int(rng.integers(4)))
+                live += 1
+            else:
+                got = q.dequeue(int(rng.integers(4)))
+                if got is not None:
+                    live -= 1
+                else:
+                    assert live == 0
+            sizes = q.queue_sizes()
+            assert sum(sizes) == len(q) == live
+            assert all(s >= 0 for s in sizes)
+
+
+class TestDomainQueues:
+    def test_longest_steal_order_with_tie_break(self):
+        q = DomainQueues(4, steal_order="longest")
+        q.enqueue("a", 1)
+        q.enqueue("b", 3)
+        q.enqueue("c", 3)
+        got = q.dequeue(0)
+        assert (got.item, got.domain, got.stolen) == ("b", 3, True)
+        # now 1 and 3 are tied at depth 1: lowest domain id wins
+        got = q.dequeue(0)
+        assert (got.item, got.domain) == ("a", 1)
+
+    def test_min_victim_threshold(self):
+        q = DomainQueues(2)
+        q.enqueue("x", 1)
+        assert q.dequeue(0, min_victim=2) is None       # too shallow to rob
+        assert len(q) == 1
+        q.enqueue("y", 1)
+        got = q.dequeue(0, min_victim=2)
+        assert got.item == "x" and got.stolen
+
+    def test_allow_steal_false(self):
+        q = DomainQueues(2)
+        q.enqueue("x", 1)
+        assert q.dequeue(0, allow_steal=False) is None
+        assert q.dequeue(1).stolen is False
+
+    def test_random_steal_needs_rng(self):
+        with pytest.raises(ValueError):
+            DomainQueues(2, steal_order="random")
+
+
+class TestSubmissionPool:
+    def test_fifo_and_cap_accounting(self):
+        p = SubmissionPool(cap=3)
+        for i in range(3):
+            p.push(i)
+        assert p.full and p.free_slots == 0
+        assert p.pop() == 0
+        assert not p.full and p.free_slots == 1
+        assert [p.pop(), p.pop(), p.pop()] == [1, 2, None]
+
+
+def _submit_n(ex, n, homes):
+    for i in range(n):
+        ex.submit(ex.make_task(payload=i, home=int(homes[i % len(homes)])))
+
+
+class TestExecutor:
+    def test_deterministic_per_seed(self):
+        def run(seed):
+            ex = Executor(num_domains=3, steal_order="random", seed=seed)
+            _submit_n(ex, 30, [0, 0, 0, 1, 2])
+            ex.run_until_drained()
+            return ([(e.kind, e.worker, e.task_uid, e.src_domain)
+                     for e in ex.events], ex.metrics.snapshot())
+        assert run(7) == run(7)
+        assert run(1) == run(1)
+
+    def test_local_steal_stats_under_skew(self):
+        # everything homed on domain 0 of 2: worker 1 can only steal
+        ex = Executor(num_domains=2)
+        _submit_n(ex, 10, [0])
+        results = ex.run_until_drained()
+        s = ex.stats
+        assert len(results) == 10 and s.executed == 10
+        assert s.stolen > 0 and s.local > 0
+        assert s.local + s.stolen == 10          # nothing is both or neither
+        assert ex.pool[1].stats.stolen == s.stolen
+        assert abs(s.local_fraction + s.steal_fraction - 1.0) < 1e-9
+
+    def test_all_local_when_balanced(self):
+        ex = Executor(num_domains=2)
+        _submit_n(ex, 10, [0, 1])
+        ex.run_until_drained()
+        assert ex.stats.local == 10 and ex.stats.stolen == 0
+
+    def test_homeless_tasks_round_robin_and_never_local(self):
+        ex = Executor(num_domains=2)
+        _submit_n(ex, 8, [-1])
+        ex.run_until_drained()
+        s = ex.stats
+        assert s.executed == 8
+        assert s.local == 0                      # home -1 matches no domain
+        assert s.stolen == 0                     # round-robin spread evenly
+
+    def test_backpressure_bounds_pool_depth(self):
+        ex = Executor(num_domains=2, pool_cap=8)
+        _submit_n(ex, 100, [0, 1, 0, 0])         # skew so steals happen too
+        ex.run_until_drained()
+        s = ex.stats
+        assert s.executed == 100
+        assert s.max_pool_depth <= 8
+        assert s.inline_runs > 0                 # the submitter had to help
+
+    def test_steal_penalty_accounting(self):
+        ex = Executor(num_domains=2,
+                      steal_penalty=lambda task, worker: task.cost)
+        for i in range(6):
+            ex.submit(ex.make_task(payload=i, home=0, cost=3.0))
+        ex.run_until_drained()
+        s = ex.stats
+        assert s.steal_penalty == pytest.approx(3.0 * s.stolen)
+
+    def test_results_in_completion_order_and_cleared(self):
+        ex = Executor(num_domains=2,
+                      handler=lambda task, worker: (task.payload, worker.wid))
+        _submit_n(ex, 6, [0, 1])
+        out = ex.run_until_drained()
+        assert sorted(p for p, _ in out) == list(range(6))
+        assert ex.run_until_drained() == []      # drained and cleared
+
+    def test_adaptive_steals_fewer_than_greedy(self):
+        def drive(governor):
+            ex = Executor(num_domains=2, governor=governor,
+                          steal_penalty=lambda t, w: 6.0)
+            uid = 0
+            for _ in range(20):                  # online: 2 arrivals per round
+                for _ in range(2):
+                    ex.submit(ex.make_task(payload=uid, home=0))
+                    uid += 1
+                ex.step()
+            ex.run_until_drained()
+            return ex.stats
+        greedy = drive(None)
+        adaptive = drive(AdaptiveSteal(penalty_hint=6.0))
+        assert greedy.executed == adaptive.executed == 40
+        assert adaptive.stolen < greedy.stolen
+        assert adaptive.steal_penalty < greedy.steal_penalty
+
+    def test_no_steal_governor_still_drains(self):
+        ex = Executor(num_domains=2, governor=NoSteal())
+        _submit_n(ex, 12, [0, 1, 0])
+        ex.run_until_drained()
+        assert ex.stats.executed == 12 and ex.stats.stolen == 0
+        assert ex.stats.local == 12
+
+    def test_event_log_counts_match_stats(self):
+        ex = Executor(num_domains=2)
+        _submit_n(ex, 9, [0, 0, 1])
+        ex.run_until_drained()
+        counts = ex.events.counts()
+        s = ex.stats
+        assert counts["submit"] == s.submitted == 9
+        assert counts.get("steal", 0) == s.stolen
+        assert counts.get("run", 0) + counts.get("steal", 0) \
+            + counts.get("inline", 0) == s.executed
+
+
+class TestRuntimeJacobiPath:
+    def test_runtime_sweep_matches_ref_any_policy(self):
+        jnp = pytest.importorskip("jax.numpy")  # noqa: F841 (jax-backed ref)
+        from repro.kernels.jacobi.ref import jacobi_sweep_ref
+        from repro.stencil.jacobi import run_runtime_sweep
+
+        rng = np.random.default_rng(3)
+        f = rng.standard_normal((40, 8, 8)).astype(np.float32)
+        ref = np.asarray(jacobi_sweep_ref(f))
+        for gov, order in ((None, "cyclic"), (NoSteal(), "cyclic"),
+                           (AdaptiveSteal(), "longest")):
+            out, stats = run_runtime_sweep(f, di=5, num_domains=4,
+                                           workers_per_domain=2, governor=gov,
+                                           steal_order=order)
+            assert np.array_equal(out, ref)
+            assert stats.executed == 8

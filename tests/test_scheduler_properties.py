@@ -1,5 +1,8 @@
 """Property-based tests (hypothesis) for the scheduling invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
