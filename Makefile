@@ -2,7 +2,7 @@
 # works without an editable install.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test smoke bench
+.PHONY: test smoke bench trace
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -15,3 +15,9 @@ smoke: test
 # the full benchmark harness (paper tables/figures + runtime)
 bench:
 	$(PY) -m benchmarks.run
+
+# trace loop smoke: record -> analyze -> replay a small stencil sweep
+# (repro.trace end to end), then a fast governor A/B on recorded traces
+trace:
+	$(PY) examples/trace_stencil.py
+	$(PY) -m benchmarks.trace_replay --fast

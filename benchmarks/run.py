@@ -47,7 +47,8 @@ def main() -> None:
 
     from benchmarks import runtime_throughput
     t0 = time.time()
-    lines = runtime_throughput.main(n_tasks=1600 if full else 160)
+    lines = runtime_throughput.main(n_tasks=1600 if full else 160,
+                                    json_path="BENCH_runtime.json")
     dt = time.time() - t0
     _block("Runtime: online policies x arrival scenarios", lines)
     rows = {tuple(l.split(",")[:2]): l.split(",") for l in lines[1:]}
@@ -57,6 +58,19 @@ def main() -> None:
     summary.append(("runtime_throughput", dt * 1e6 / max(len(lines), 1),
                     f"skew_lq_local={skew_lq:.2f},"
                     f"adapt_penalty_save={1 - pen_ad / max(pen_lq, 1):.2f}"))
+
+    from benchmarks import trace_replay
+    t0 = time.time()
+    lines = trace_replay.main(steps=96 if full else 24)
+    dt = time.time() - t0
+    _block("Trace replay: governor A/B on identical recorded traces", lines)
+    rows = {tuple(l.split(",")[:2]): l.split(",") for l in lines[1:]}
+    hot_greedy = float(rows[("hot_skew", "greedy")][5])
+    hot_meas = float(rows[("hot_skew", "measured")][5])
+    theta = rows[("hot_skew", "measured")][8]
+    summary.append(("trace_replay", dt * 1e6 / max(len(lines), 1),
+                    f"hot_measured_penalty_save="
+                    f"{1 - hot_meas / max(hot_greedy, 1):.2f},theta={theta}"))
 
     from benchmarks import table1_stream
     t0 = time.time()

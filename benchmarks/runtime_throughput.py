@@ -26,9 +26,16 @@ units ≈ a prefix re-prefill); ``steps`` is the number of scheduling rounds
 until drained (the discrete makespan proxy).
 
 CSV: scenario,policy,tasks,local_frac,steal_frac,steal_penalty,idle_polls,steps
+
+Alongside the CSV, ``main(json_path=...)`` (default ``BENCH_runtime.json``
+when run as a script) writes a machine-readable ``scenario -> policy ->
+{throughput, local_fraction, steal_penalty, ...}`` summary so the perf
+trajectory is comparable across PRs (``throughput`` = tasks per scheduling
+round, the discrete makespan-normalized rate).
 """
 from __future__ import annotations
 
+import json
 import sys
 
 import numpy as np
@@ -90,7 +97,25 @@ def _drive(waves, route_by_home: bool, governor, seed: int):
     return ex
 
 
-def main(n_tasks: int = 400, seed: int = 0) -> list[str]:
+def to_json(lines: list[str]) -> dict:
+    """CSV summary lines -> ``scenario -> policy -> metrics`` dict."""
+    out: dict[str, dict[str, dict[str, float]]] = {}
+    for ln in lines[1:]:
+        scen, pol, tasks, local, steal, pen, idle, steps = ln.split(",")
+        out.setdefault(scen, {})[pol] = {
+            "tasks": int(tasks),
+            "steps": int(steps),
+            "throughput": round(int(tasks) / max(int(steps), 1), 4),
+            "local_fraction": float(local),
+            "steal_fraction": float(steal),
+            "steal_penalty": float(pen),
+            "idle_polls": int(idle),
+        }
+    return out
+
+
+def main(n_tasks: int = 400, seed: int = 0,
+         json_path: str | None = None) -> list[str]:
     lines = ["scenario,policy,tasks,local_frac,steal_frac,steal_penalty,"
              "idle_polls,steps"]
     for scen_name, waves in _scenarios(n_tasks, seed).items():
@@ -102,10 +127,16 @@ def main(n_tasks: int = 400, seed: int = 0) -> list[str]:
                 f"{scen_name},{pol_name},{s.executed},"
                 f"{s.local_fraction:.3f},{s.steal_fraction:.3f},"
                 f"{s.steal_penalty:.0f},{s.idle_polls},{ex.step_count}")
+    if json_path:
+        with open(json_path, "w", encoding="utf-8") as fh:
+            json.dump({"bench": "runtime_throughput", "n_tasks": n_tasks,
+                       "seed": seed, "results": to_json(lines)}, fh, indent=2)
+            fh.write("\n")
     return lines
 
 
 if __name__ == "__main__":
     fast = "--fast" in sys.argv
-    for ln in main(n_tasks=160 if fast else 400):
+    for ln in main(n_tasks=160 if fast else 400,
+                   json_path="BENCH_runtime.json"):
         print(ln)

@@ -25,6 +25,10 @@ Paper-concept map (Wittmann & Hager, 2010):
                                          ``AdaptiveSteal`` governor throttles
                                          it by queue depth (beyond the paper)
 
+The table continues in ``repro/trace/__init__.py`` — workload generation,
+trace export, deterministic replay, and steal-storm analysis over these
+primitives (record a run via ``Executor(submit_hook=...)``).
+
 Usage::
 
     from repro.runtime import AdaptiveSteal, Executor

@@ -39,8 +39,12 @@ class StealGovernor:
     def on_idle(self, worker: Worker) -> None:
         """Called when ``worker`` polled and found nothing it may take."""
 
-    def on_execute(self, worker: Worker, stolen: bool, penalty: float) -> None:
-        """Called after ``worker`` executed a task."""
+    def on_execute(self, worker: Worker, stolen: bool, penalty: float,
+                   cost: float = 1.0) -> None:
+        """Called after ``worker`` executed a task.  ``cost`` is the task's
+        local execution cost (its measured service time is ``cost+penalty``)
+        so governors can learn service times online instead of being
+        configured with static hints (``repro.trace.MeasuredPenalty``)."""
 
 
 class GreedySteal(StealGovernor):
@@ -93,7 +97,8 @@ class AdaptiveSteal(StealGovernor):
     def on_idle(self, worker: Worker) -> None:
         self._idle[worker.wid] += 1
 
-    def on_execute(self, worker: Worker, stolen: bool, penalty: float) -> None:
+    def on_execute(self, worker: Worker, stolen: bool, penalty: float,
+                   cost: float = 1.0) -> None:
         self._idle[worker.wid] = 0
         if stolen:
             self._penalty = (1 - self.ema) * self._penalty + self.ema * penalty

@@ -13,6 +13,11 @@ Event kinds:
   ``inline``  — the submitter executed a task because the pool was full
                 (OpenMP §2.1 backpressure)
   ``idle``    — a worker polled for work and found none it may take
+
+Window vs totals: the ring buffer retains only the newest ``maxlen`` events,
+but ``counts()`` (and ``total``) keep counting every event ever emitted.  Any
+export of the buffer therefore covers a *window* of the run, not the run —
+``to_csv_lines()`` says so explicitly in a leading marker line.
 """
 from __future__ import annotations
 
@@ -31,23 +36,44 @@ class Event:
     domain: int        # queue domain acted on
     task_uid: int      # -1 for idle polls
     src_domain: int = -1   # for steals: the victim queue
+    cost: float = 0.0      # task's local execution cost (run/steal/inline)
+    penalty: float = 0.0   # nonlocal penalty actually charged (steal only)
+
+    @property
+    def service(self) -> float:
+        """Measured service time of an execution event: the local cost plus
+        any nonlocal penalty paid.  0.0 for submit/idle events."""
+        return self.cost + self.penalty
 
 
 class EventLog:
     """Bounded ring buffer of events (oldest dropped first)."""
 
     def __init__(self, maxlen: int = 65536):
+        self.maxlen = maxlen
         self._buf: deque[Event] = deque(maxlen=maxlen)
         self._counts: Counter[str] = Counter()
 
     def emit(self, step: int, kind: str, worker: int, domain: int,
-             task_uid: int, src_domain: int = -1) -> None:
-        self._buf.append(Event(step, kind, worker, domain, task_uid, src_domain))
+             task_uid: int, src_domain: int = -1, cost: float = 0.0,
+             penalty: float = 0.0) -> None:
+        self._buf.append(Event(step, kind, worker, domain, task_uid,
+                               src_domain, cost, penalty))
         self._counts[kind] += 1
 
     def counts(self) -> dict[str, int]:
         """Totals per kind over the whole run (not just the retained window)."""
         return dict(self._counts)
+
+    @property
+    def total(self) -> int:
+        """Events emitted over the whole run (retained + dropped)."""
+        return sum(self._counts.values())
+
+    @property
+    def dropped(self) -> int:
+        """Events the ring buffer has already discarded (oldest first)."""
+        return self.total - len(self._buf)
 
     def tail(self, n: int = 50) -> list[Event]:
         return list(self._buf)[-n:]
@@ -59,7 +85,15 @@ class EventLog:
         return iter(self._buf)
 
     def to_csv_lines(self) -> list[str]:
-        out = ["step,kind,worker,domain,task_uid,src_domain"]
+        """CSV export of the *retained window* only.
+
+        The first line is a ``#`` marker recording total vs retained vs
+        dropped so a truncated export can never be mistaken for the whole
+        run (``counts()`` always covers the whole run).
+        """
+        out = [f"# events total={self.total} retained={len(self._buf)} "
+               f"dropped={self.dropped} window={self.maxlen}",
+               "step,kind,worker,domain,task_uid,src_domain,cost,penalty"]
         out += [f"{e.step},{e.kind},{e.worker},{e.domain},{e.task_uid},"
-                f"{e.src_domain}" for e in self._buf]
+                f"{e.src_domain},{e.cost:g},{e.penalty:g}" for e in self._buf]
         return out

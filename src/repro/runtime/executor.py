@@ -46,6 +46,7 @@ class Task:
 
 Handler = Callable[[Task, Worker], Any]
 PenaltyFn = Callable[[Task, Worker], float]
+SubmitHook = Callable[[Task, int, int], None]   # (task, routed_domain, step)
 
 
 def _default_handler(task: Task, worker: Worker) -> Any:
@@ -71,6 +72,10 @@ class Executor:
     steal_penalty:      ``(task, worker) -> cost`` charged on steals (e.g.
                         re-prefill tokens); accounted in the metrics.
     seed:               drives the executor's RNG (used by random stealing).
+    submit_hook:        optional ``(task, routed_domain, step)`` callback fired
+                        as each task is enqueued — the recording surface used
+                        by ``repro.trace.TraceRecorder`` to capture a
+                        replayable submission trace.
     """
 
     def __init__(self, num_domains: int,
@@ -82,8 +87,10 @@ class Executor:
                  steal_penalty: PenaltyFn | None = None,
                  seed: int = 0,
                  record_events: bool = True,
-                 event_maxlen: int = 65536):
+                 event_maxlen: int = 65536,
+                 submit_hook: SubmitHook | None = None):
         self.num_domains = num_domains
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.queues = DomainQueues(num_domains, steal_order=steal_order,
                                    rng=self.rng)
@@ -99,6 +106,7 @@ class Executor:
         self.steal_penalty = steal_penalty
         self.metrics = MetricsRecorder()
         self.events = EventLog(event_maxlen) if record_events else None
+        self.submit_hook = submit_hook
         self.results: list[Any] = []
         self._uids = itertools.count()
         self._rr = 0
@@ -132,7 +140,10 @@ class Executor:
                 break
         self.queues.enqueue(task, domain)
         self.metrics.on_submit(len(self.queues))
-        self._emit("submit", worker=-1, domain=domain, task_uid=task.uid)
+        self._emit("submit", worker=-1, domain=domain, task_uid=task.uid,
+                   cost=task.cost)
+        if self.submit_hook is not None:
+            self.submit_hook(task, domain, self._step)
 
     # -- execution side -----------------------------------------------------
     def step(self) -> int:
@@ -188,19 +199,21 @@ class Executor:
         worker.stats.local += int(local)
         worker.stats.stolen += int(stolen)
         self.metrics.on_execute(local, stolen, penalty, inline)
-        self.governor.on_execute(worker, stolen, penalty)
+        self.governor.on_execute(worker, stolen, penalty, task.cost)
         kind = "inline" if inline else ("steal" if stolen else "run")
         self._emit(kind, worker=worker.wid, domain=worker.domain,
-                   task_uid=task.uid, src_domain=got.domain)
+                   task_uid=task.uid, src_domain=got.domain,
+                   cost=task.cost, penalty=penalty)
         if result is not None:
             self.results.append(result)
         return True
 
     def _emit(self, kind: str, worker: int, domain: int, task_uid: int,
-              src_domain: int = -1) -> None:
+              src_domain: int = -1, cost: float = 0.0,
+              penalty: float = 0.0) -> None:
         if self.events is not None:
             self.events.emit(self._step, kind, worker, domain, task_uid,
-                             src_domain)
+                             src_domain, cost, penalty)
 
     # -- introspection ------------------------------------------------------
     @property

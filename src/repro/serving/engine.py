@@ -26,6 +26,10 @@ Routing policies:
 The engine runs the real model (prefill + decode steps) for every request;
 tests/test_serving.py checks the outputs are identical under every routing
 policy while the steal/local statistics differ as the paper predicts.
+
+Pass ``trace=repro.trace.TraceRecorder()`` to record the router's behaviour
+as a replayable trace (steal-storm analysis / offline policy A/B without
+re-running the model).
 """
 from __future__ import annotations
 
@@ -38,6 +42,7 @@ import numpy as np
 
 from ..models.model import Model
 from ..runtime import Executor, Task, Worker
+from ..trace import TraceRecorder
 
 POLICIES = ("locality", "round_robin", "single_queue")
 
@@ -95,7 +100,8 @@ class ServingEngine:
 
     def __init__(self, model: Model, params: Any, num_replicas: int = 2,
                  max_seq: int = 128, policy: str = "locality",
-                 pool_cap: Optional[int] = 256):
+                 pool_cap: Optional[int] = 256,
+                 trace: Optional[TraceRecorder] = None):
         if policy not in POLICIES:
             raise ValueError(policy)
         self.policy = policy
@@ -113,6 +119,12 @@ class ServingEngine:
             steal_penalty=self._steal_penalty,
             pool_cap=pool_cap,
         )
+        # optional trace hook: record this engine's routing/steal behaviour
+        # as a replayable repro.trace trace (request payloads stay opaque;
+        # the submission stream carries home replica + prompt-length cost).
+        self.trace = trace
+        if trace is not None:
+            trace.attach(self._exec)
         self._prefill_base = 0      # first-prefill tokens of served requests
         self._accidental_local = 0  # served by home replica, any routing
 

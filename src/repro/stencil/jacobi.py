@@ -170,7 +170,8 @@ def run_runtime_sweep(f, c: float = 1.0 / 6.0, di: int = 10,
                       steal_order: str = "cyclic",
                       governor: StealGovernor | None = None,
                       pool_cap: int = 256,
-                      seed: int = 0) -> tuple[np.ndarray, RuntimeStats]:
+                      seed: int = 0,
+                      trace=None) -> tuple[np.ndarray, RuntimeStats]:
     """One whole-lattice sweep executed as online runtime tasks.
 
     The third execution path next to the shard_map'd SPMD sweeps above: the
@@ -181,6 +182,12 @@ def run_runtime_sweep(f, c: float = 1.0 / 6.0, di: int = 10,
     commute and any schedule yields the exact ``jacobi_sweep_ref`` answer —
     the scheduling policy changes the local/steal statistics, never the
     physics.  Returns ``(new_lattice, runtime_stats)``.
+
+    ``trace`` takes an optional ``repro.trace.TraceRecorder``: the sweep's
+    slab-task schedule is then recorded for offline steal-storm analysis
+    and deterministic replay (``repro.trace.replay`` re-drives the same
+    slab arrival sequence under any policy; the replayed task payloads are
+    placeholders — replay studies the *schedule*, not the physics).
     """
     f = np.asarray(f)
     ni = f.shape[0]
@@ -204,6 +211,8 @@ def run_runtime_sweep(f, c: float = 1.0 / 6.0, di: int = 10,
                                 for _ in range(workers_per_domain)],
                   handler=update_slab, steal_order=steal_order,
                   governor=governor, pool_cap=pool_cap, seed=seed)
+    if trace is not None:
+        trace.attach(ex)
     for s in range(nslabs):
         home = s * num_domains // nslabs       # contiguous slabs per domain
         ex.submit(ex.make_task(payload=s, home=home))

@@ -1,0 +1,63 @@
+"""JSONL trace files: ``TraceWriter`` / ``TraceReader``.
+
+One JSON object per line, in record order header → submissions → events →
+footer (see ``repro.trace.schema`` for the record shapes).  JSONL keeps the
+format append-friendly and greppable; the reader is order-insensitive apart
+from requiring a header, and rejects unknown schema versions up front.
+
+    TraceWriter("run.trace.jsonl").write(trace)
+    trace = TraceReader("run.trace.jsonl").read()
+
+``dumps_lines``/``loads_lines`` expose the same round-trip on in-memory line
+lists (no filesystem), which tests and the serving engine's trace hook use.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterable
+
+from .schema import (Trace, event_dict, footer_dict, header_dict,
+                     parse_records, submission_dict)
+
+
+def dumps_lines(trace: Trace) -> list[str]:
+    """Serialize ``trace`` to JSONL lines (no trailing newlines)."""
+    lines = [json.dumps(header_dict(trace.meta))]
+    lines += [json.dumps(submission_dict(s)) for s in trace.submissions]
+    lines += [json.dumps(event_dict(e)) for e in trace.events]
+    lines.append(json.dumps(footer_dict(trace)))
+    return lines
+
+
+def loads_lines(lines: Iterable[str]) -> Trace:
+    """Parse JSONL lines (blank lines ignored) back into a ``Trace``."""
+    records = (json.loads(ln) for ln in lines if ln.strip())
+    return parse_records(records)
+
+
+class TraceWriter:
+    """Write a ``Trace`` to a JSONL file (parent dirs created)."""
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = os.fspath(path)
+
+    def write(self, trace: Trace) -> str:
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(self.path, "w", encoding="utf-8") as fh:
+            for ln in dumps_lines(trace):
+                fh.write(ln + "\n")
+        return self.path
+
+
+class TraceReader:
+    """Read a JSONL trace file back into a ``Trace``."""
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = os.fspath(path)
+
+    def read(self) -> Trace:
+        with open(self.path, "r", encoding="utf-8") as fh:
+            return loads_lines(fh)

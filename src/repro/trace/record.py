@@ -1,0 +1,76 @@
+"""Recording a live ``Executor`` run into a replayable ``Trace``.
+
+``TraceRecorder`` attaches to an executor via its ``submit_hook`` (the only
+instrumentation point recording needs: everything else the runtime already
+traces in its ``EventLog``), accumulates one ``SubmissionRecord`` per
+enqueued task, and on ``finish()`` snapshots the executor's construction
+meta, retained events, whole-run event counts, and final ``RuntimeStats``
+into a ``Trace``.
+
+Usage::
+
+    rec = TraceRecorder()
+    ex = rec.attach(Executor(4, steal_penalty=...))
+    ... drive ex (submit/step/run_until_drained) ...
+    trace = rec.finish()
+    TraceWriter(path).write(trace)           # repro.trace.io
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from ..runtime import Executor, Task
+from .schema import SubmissionRecord, Trace
+
+
+class TraceRecorder:
+    """Capture an executor run as a replayable submission + event trace."""
+
+    def __init__(self) -> None:
+        self.submissions: list[SubmissionRecord] = []
+        self._ex: Optional[Executor] = None
+
+    def attach(self, executor: Executor) -> Executor:
+        """Hook into ``executor`` and return it (chainable).  The executor
+        should record events (``record_events=True``, the default) if storm
+        analysis or measured-penalty feedback is wanted; the submission
+        trace alone is enough for replay."""
+        if self._ex is not None:
+            raise RuntimeError("TraceRecorder is already attached; "
+                               "use one recorder per run")
+        executor.submit_hook = self._on_submit
+        self._ex = executor
+        return executor
+
+    def _on_submit(self, task: Task, domain: int, step: int) -> None:
+        self.submissions.append(SubmissionRecord(
+            uid=task.uid, step=step, home=task.home,
+            cost=float(task.cost), domain=domain))
+
+    @property
+    def executor(self) -> Executor:
+        if self._ex is None:
+            raise RuntimeError("TraceRecorder is not attached to an executor")
+        return self._ex
+
+    def finish(self) -> Trace:
+        """Snapshot the attached executor's end-of-run state as a ``Trace``.
+
+        Call after the drive loop (typically after ``run_until_drained``);
+        calling mid-run simply yields a trace of the run so far.
+        """
+        ex = self.executor
+        meta = {
+            "num_domains": ex.num_domains,
+            "worker_domains": [w.domain for w in ex.pool],
+            "steal_order": ex.queues.steal_order,
+            "pool_cap": ex.pool_cap,
+            "seed": ex.seed,
+            "governor": type(ex.governor).__name__,
+        }
+        events = list(ex.events) if ex.events is not None else []
+        counts = ex.events.counts() if ex.events is not None else {}
+        return Trace(meta=meta, submissions=list(self.submissions),
+                     events=events, total_steps=ex.step_count,
+                     stats=ex.metrics.snapshot(), event_counts=counts,
+                     events_retained=len(events))

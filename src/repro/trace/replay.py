@@ -1,0 +1,127 @@
+"""Deterministic replay: re-drive an ``Executor`` from a recorded trace.
+
+The runtime is deterministic by construction (cooperative round-robin
+workers, seeded RNG), so a run is fully determined by (a) the executor's
+construction parameters and (b) the interleaving of ``submit`` and ``step``
+calls.  A trace records exactly that: each submission carries the step-clock
+value at which it was enqueued plus the queue it was routed to, and the
+footer carries the total step count.  ``replay`` reconstructs the
+interleaving:
+
+    for each recorded submission, step the executor until its step clock
+    matches, then submit an equivalent task (same uid/home/cost) to the
+    recorded queue; finally step out the remaining recorded rounds and
+    drain.
+
+Because the routed domain is recorded, replay is *schedule-faithful* on the
+submission side regardless of how the original chose queues (home routing,
+round-robin, explicit) — and the execution side re-decides under whatever
+governor/steal-order the replay executor carries.  That is the point: the
+same arrival sequence, different policy ⇒ an honest A/B of steal policies
+(``benchmarks/trace_replay.py``).  With a policy-equivalent executor (the
+default factory + the recorded governor semantics and the same penalty
+function), the replayed ``RuntimeStats`` reproduce the recorded ones
+bit-for-bit — asserted by ``ReplayResult.matches_recorded``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from ..runtime import (AdaptiveSteal, Executor, GreedySteal, NoSteal,
+                       StealGovernor, Task)
+from .schema import Trace
+
+GOVERNORS: dict[str, Callable[[], StealGovernor]] = {
+    "GreedySteal": GreedySteal,
+    "NoSteal": NoSteal,
+    "AdaptiveSteal": AdaptiveSteal,
+    "StealGovernor": StealGovernor,
+}
+
+# stats keys that must agree for a replay to count as exact; results of
+# handlers (payload-dependent) are deliberately out of scope.
+FIDELITY_KEYS = ("submitted", "executed", "local", "stolen", "inline_runs",
+                 "idle_polls", "steal_penalty", "max_pool_depth",
+                 "local_fraction", "steal_fraction")
+
+
+def executor_from_meta(trace: Trace, *,
+                       governor: StealGovernor | None = None,
+                       steal_penalty=None, handler=None,
+                       steal_order: str | None = None) -> Executor:
+    """Build a fresh executor matching the trace header.
+
+    ``governor=None`` reconstructs the recorded governor *class* (default
+    construction — governor hyper-parameters are not serialized; pass an
+    instance to override).  ``steal_penalty``/``handler``/``steal_order``
+    override the respective knobs for policy A/B replays.
+    """
+    meta = trace.meta
+    if governor is None:
+        factory = GOVERNORS.get(str(meta.get("governor")))
+        governor = factory() if factory is not None else None
+    return Executor(
+        int(meta["num_domains"]),
+        [int(d) for d in meta["worker_domains"]],
+        handler=handler,
+        pool_cap=meta.get("pool_cap"),
+        steal_order=steal_order or str(meta.get("steal_order", "cyclic")),
+        governor=governor,
+        steal_penalty=steal_penalty,
+        seed=int(meta.get("seed", 0)),
+    )
+
+
+@dataclasses.dataclass
+class ReplayResult:
+    executor: Executor
+    trace: Trace
+
+    @property
+    def stats(self) -> dict[str, float]:
+        return self.executor.metrics.snapshot()
+
+    @property
+    def matches_recorded(self) -> bool:
+        """True when the replayed RuntimeStats reproduce the recorded ones
+        exactly (the determinism acceptance check)."""
+        rec, got = self.trace.stats, self.stats
+        return all(got.get(k) == rec.get(k) for k in FIDELITY_KEYS)
+
+    def mismatches(self) -> dict[str, tuple[Any, Any]]:
+        rec, got = self.trace.stats, self.stats
+        return {k: (rec.get(k), got.get(k)) for k in FIDELITY_KEYS
+                if got.get(k) != rec.get(k)}
+
+
+def replay(trace: Trace,
+           executor_factory: Optional[Callable[[Trace], Executor]] = None,
+           *, assert_match: bool = False) -> ReplayResult:
+    """Re-drive an executor through the trace's recorded arrival sequence.
+
+    ``executor_factory(trace) -> Executor`` supplies the executor (default:
+    ``executor_from_meta`` — the recorded configuration).  The factory must
+    return a *fresh* executor whose step clock is at 0.  With
+    ``assert_match=True`` the replayed stats are checked bit-for-bit
+    against the recorded footer stats (use only with a policy-equivalent
+    factory, including the recorded run's penalty function).
+    """
+    ex = (executor_factory or executor_from_meta)(trace)
+    if ex.step_count != 0:
+        raise ValueError("replay needs a fresh executor (step clock at 0)")
+    for rec in trace.submissions:
+        while ex.step_count < rec.step:
+            ex.step()
+        ex.submit(Task(uid=rec.uid, payload=None, home=rec.home,
+                       cost=rec.cost), domain=rec.domain)
+    # replicate any trailing rounds (including idle polls on empty queues —
+    # they are part of the recorded stats), then drain whatever is left.
+    while ex.step_count < trace.total_steps:
+        ex.step()
+    ex.run_until_drained()
+    result = ReplayResult(executor=ex, trace=trace)
+    if assert_match and not result.matches_recorded:
+        raise AssertionError(
+            f"replay diverged from recorded stats: {result.mismatches()}")
+    return result

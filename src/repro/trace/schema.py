@@ -1,0 +1,163 @@
+"""Trace record formats and schema versioning.
+
+A *trace* is everything needed to (a) re-drive an ``Executor`` through the
+exact same submit/step interleaving it saw online and (b) analyze what the
+scheduler did.  It has four record kinds, serialized one-JSON-object-per-line
+(JSONL, see ``repro.trace.io``):
+
+  header      — schema version + the executor's construction parameters
+                (``num_domains``, ``worker_domains``, ``steal_order``,
+                ``pool_cap``, ``seed``, governor class name)
+  submission  — one per submitted task: ``(uid, step, home, cost, domain)``
+                where ``step`` is the scheduling round at submission time
+                (the arrival clock) and ``domain`` the queue it was routed
+                to.  This is the *complete* replay input: payloads are
+                opaque and deliberately not serialized.
+  event       — one per retained ``runtime.Event`` (window semantics: the
+                ring buffer keeps the newest ``event_maxlen`` events; the
+                header's ``events_total`` counts carry whole-run totals).
+  footer      — end-of-run ground truth: ``total_steps`` plus the full
+                ``RuntimeStats`` snapshot, the replay-fidelity oracle.
+
+``SCHEMA_VERSION`` gates the reader: traces written by a future incompatible
+format raise instead of silently mis-replaying.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable
+
+from ..runtime import Event
+
+SCHEMA_VERSION = 1
+TRACE_KIND = "repro.runtime-trace"
+
+
+class TraceSchemaError(ValueError):
+    """Raised when a trace's schema/shape doesn't match this reader."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SubmissionRecord:
+    """One recorded ``Executor.submit``: the replayable arrival."""
+
+    uid: int
+    step: int          # executor step count when the task was enqueued
+    home: int
+    cost: float
+    domain: int        # the queue the executor routed it to
+
+
+@dataclasses.dataclass
+class Trace:
+    """In-memory form of a recorded run (see module docstring)."""
+
+    meta: dict[str, Any]
+    submissions: list[SubmissionRecord]
+    events: list[Event]
+    total_steps: int
+    stats: dict[str, float]
+    event_counts: dict[str, int] = dataclasses.field(default_factory=dict)
+    events_retained: int = 0
+
+    @property
+    def num_domains(self) -> int:
+        return int(self.meta["num_domains"])
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.submissions)
+
+    def service_times(self) -> dict[str, list[float]]:
+        """Measured per-task service times from the retained execution
+        events, keyed by how the task was served (``run``/``steal``/
+        ``inline``).  A steal's service is its cost plus the nonlocal
+        penalty actually charged — the raw material for
+        ``repro.trace.MeasuredPenalty``.  Stolenness is judged by the
+        victim queue, not the event kind: a backpressure ``inline``
+        execution that took a foreign task counts as ``steal`` (the
+        executor labels it ``inline`` but it pays the nonlocal penalty
+        all the same)."""
+        out: dict[str, list[float]] = {"run": [], "steal": [], "inline": []}
+        for e in self.events:
+            if e.kind in out:
+                key = "steal" if event_stolen(e) else e.kind
+                out[key].append(e.service)
+        return out
+
+
+def event_stolen(e: Event) -> bool:
+    """True when an execution event took its task from a foreign queue
+    (``run``/``steal``/``inline`` alike): the victim queue differs from the
+    worker's own domain.  Matches the executor's ``stolen`` accounting,
+    which the ``inline`` kind label hides for backpressure steals."""
+    return (e.kind in ("run", "steal", "inline")
+            and e.src_domain >= 0 and e.src_domain != e.domain)
+
+
+# -- dict (de)serialization, one record per line -----------------------------
+
+def header_dict(meta: dict[str, Any]) -> dict[str, Any]:
+    return {"record": "header", "kind": TRACE_KIND,
+            "schema": SCHEMA_VERSION, **meta}
+
+
+def submission_dict(s: SubmissionRecord) -> dict[str, Any]:
+    return {"record": "submission", "uid": s.uid, "step": s.step,
+            "home": s.home, "cost": s.cost, "domain": s.domain}
+
+
+def event_dict(e: Event) -> dict[str, Any]:
+    return {"record": "event", "step": e.step, "kind": e.kind,
+            "worker": e.worker, "domain": e.domain, "task_uid": e.task_uid,
+            "src_domain": e.src_domain, "cost": e.cost, "penalty": e.penalty}
+
+
+def footer_dict(trace: Trace) -> dict[str, Any]:
+    return {"record": "footer", "total_steps": trace.total_steps,
+            "stats": trace.stats, "event_counts": trace.event_counts,
+            "events_retained": trace.events_retained}
+
+
+def parse_records(records: Iterable[dict[str, Any]]) -> Trace:
+    """Assemble a ``Trace`` from parsed record dicts, validating schema."""
+    meta: dict[str, Any] | None = None
+    submissions: list[SubmissionRecord] = []
+    events: list[Event] = []
+    footer: dict[str, Any] = {}
+    for rec in records:
+        r = rec.get("record")
+        if r == "header":
+            if rec.get("kind") != TRACE_KIND:
+                raise TraceSchemaError(f"not a runtime trace: {rec.get('kind')!r}")
+            if rec.get("schema") != SCHEMA_VERSION:
+                raise TraceSchemaError(
+                    f"trace schema {rec.get('schema')!r} != "
+                    f"supported {SCHEMA_VERSION}")
+            meta = {k: v for k, v in rec.items()
+                    if k not in ("record", "kind", "schema")}
+        elif r == "submission":
+            submissions.append(SubmissionRecord(
+                uid=int(rec["uid"]), step=int(rec["step"]),
+                home=int(rec["home"]), cost=float(rec["cost"]),
+                domain=int(rec["domain"])))
+        elif r == "event":
+            events.append(Event(
+                step=int(rec["step"]), kind=str(rec["kind"]),
+                worker=int(rec["worker"]), domain=int(rec["domain"]),
+                task_uid=int(rec["task_uid"]),
+                src_domain=int(rec.get("src_domain", -1)),
+                cost=float(rec.get("cost", 0.0)),
+                penalty=float(rec.get("penalty", 0.0))))
+        elif r == "footer":
+            footer = rec
+        else:
+            raise TraceSchemaError(f"unknown trace record {r!r}")
+    if meta is None:
+        raise TraceSchemaError("trace has no header record")
+    return Trace(meta=meta, submissions=submissions, events=events,
+                 total_steps=int(footer.get("total_steps", 0)),
+                 stats=dict(footer.get("stats", {})),
+                 event_counts=dict(footer.get("event_counts", {})),
+                 events_retained=int(footer.get("events_retained",
+                                                len(events))))

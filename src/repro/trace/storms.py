@@ -1,0 +1,161 @@
+"""Steal-storm analysis: windowed detectors over runtime event streams.
+
+The paper's Fig. 4 argument is that aggregate throughput hides what the
+scheduler is doing — you need per-thread, per-interval timelines to see the
+runs where dynamic scheduling degenerates into a storm of nonlocal accesses.
+This module is the online analogue: it folds an event stream (live
+``EventLog`` contents or a recorded ``Trace``) into fixed-width step
+windows and flags the pathological ones:
+
+  steal storm     — execution in a window dominated by steals: the balance
+                    mechanism is bulk-migrating work (paying the nonlocal
+                    penalty on most tasks) instead of occasionally topping
+                    up an idle domain.
+  inline burst    — a burst of submitter-executed tasks: the bounded pool
+                    saturated and backpressure kicked in (§2.1), i.e.
+                    arrivals outran the worker team.
+  depth imbalance — per-domain queue depths diverging inside a window: the
+                    leading indicator (deep victim queues) that a storm is
+                    about to start.
+
+``render_timeline`` draws the per-worker picture as text — one row per
+worker, one column per window, with a marker row underneath flagging storm
+windows — the terminal-friendly stand-in for the paper's variability plots.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+from ..runtime import Event
+
+EXEC_KINDS = ("run", "steal", "inline")
+
+
+@dataclasses.dataclass(frozen=True)
+class Window:
+    """Aggregate of one fixed-width step interval ``[start, start+width)``."""
+
+    start: int
+    width: int
+    runs: int = 0
+    steals: int = 0
+    inlines: int = 0
+    idles: int = 0
+    submits: int = 0
+
+    @property
+    def executed(self) -> int:
+        return self.runs + self.steals + self.inlines
+
+    @property
+    def steal_fraction(self) -> float:
+        return self.steals / max(self.executed, 1)
+
+    @property
+    def inline_fraction(self) -> float:
+        return self.inlines / max(self.executed, 1)
+
+
+def windows(events: Iterable[Event], width: int = 8) -> list[Window]:
+    """Fold an event stream into consecutive step windows of ``width``."""
+    if width < 1:
+        raise ValueError("window width must be >= 1")
+    acc: dict[int, dict[str, int]] = {}
+    for e in events:
+        w = acc.setdefault(e.step // width,
+                           {"run": 0, "steal": 0, "inline": 0,
+                            "idle": 0, "submit": 0})
+        if e.kind in w:
+            w[e.kind] += 1
+    return [Window(start=k * width, width=width, runs=v["run"],
+                   steals=v["steal"], inlines=v["inline"], idles=v["idle"],
+                   submits=v["submit"])
+            for k, v in sorted(acc.items())]
+
+
+def detect_steal_storms(events: Iterable[Event], width: int = 8,
+                        frac: float = 0.5, min_executed: int = 4) -> list[Window]:
+    """Windows where at least ``frac`` of executed tasks were steals (and
+    enough ran for the fraction to mean anything)."""
+    return [w for w in windows(events, width)
+            if w.executed >= min_executed and w.steal_fraction >= frac]
+
+
+def detect_inline_bursts(events: Iterable[Event], width: int = 8,
+                         frac: float = 0.25, min_executed: int = 4) -> list[Window]:
+    """Windows where backpressure made the submitter do ≥ ``frac`` of the
+    executing — the pool-saturated regime."""
+    return [w for w in windows(events, width)
+            if w.executed >= min_executed and w.inline_fraction >= frac]
+
+
+def depth_imbalance(depth_series: Sequence[tuple[int, tuple[int, ...]]],
+                    width: int = 8) -> list[tuple[int, float]]:
+    """Per-window queue-depth imbalance from ``MetricsRecorder.depth_series``.
+
+    Imbalance of one sample is ``max(depths) - mean(depths)`` (how far the
+    deepest queue runs ahead of the average, in tasks); each window reports
+    its worst sample.  Returns ``[(window_start, imbalance), ...]``.
+    """
+    acc: dict[int, float] = {}
+    for step, sizes in depth_series:
+        if not sizes:
+            continue
+        imb = max(sizes) - sum(sizes) / len(sizes)
+        key = step // width
+        acc[key] = max(acc.get(key, 0.0), imb)
+    return [(k * width, v) for k, v in sorted(acc.items())]
+
+
+def _cell(runs: int, steals: int, inlines: int, idles: int) -> str:
+    executed = runs + steals + inlines
+    if executed == 0:
+        return "·" if idles == 0 else "i"
+    if steals >= max(runs, inlines):
+        return "S"
+    if inlines >= max(runs, steals):
+        return "I"
+    return "r"
+
+
+def render_timeline(events: Iterable[Event], num_workers: int,
+                    width: int = 8, storm_frac: float = 0.5,
+                    min_executed: int = 4) -> str:
+    """Text timeline: one row per worker, one column per step window.
+
+    Cell legend: ``r`` run-dominated, ``S`` steal-dominated, ``I`` inline-
+    dominated (backpressure), ``i`` idle polls only, ``·`` no activity.
+    A marker row underneath carries ``^`` beneath detected steal-storm
+    windows.  This is the Fig. 4 per-thread variability picture rendered
+    for a terminal.
+    """
+    evs = list(events)
+    if not evs:
+        return "(no events)"
+    n_win = max(e.step for e in evs) // width + 1
+    per_worker = [[[0, 0, 0, 0] for _ in range(n_win)]
+                  for _ in range(num_workers)]
+    for e in evs:
+        if 0 <= e.worker < num_workers:
+            cell = per_worker[e.worker][e.step // width]
+            if e.kind == "run":
+                cell[0] += 1
+            elif e.kind == "steal":
+                cell[1] += 1
+            elif e.kind == "inline":
+                cell[2] += 1
+            elif e.kind == "idle":
+                cell[3] += 1
+    storm_keys = {w.start // width
+                  for w in detect_steal_storms(evs, width, storm_frac,
+                                               min_executed)}
+    label = max(len(f"w{num_workers - 1}"), 5)
+    lines = [f"{'steps':>{label}} 0..{n_win * width} in windows of {width} "
+             f"(r=run S=steal I=inline i=idle ·=none)"]
+    for wid in range(num_workers):
+        row = "".join(_cell(*c) for c in per_worker[wid])
+        lines.append(f"{f'w{wid}':>{label}} {row}")
+    marker = "".join("^" if k in storm_keys else " " for k in range(n_win))
+    lines.append(f"{'storm':>{label}} {marker}".rstrip())
+    return "\n".join(lines)

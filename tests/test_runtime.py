@@ -1,10 +1,11 @@
-"""Tests for the online runtime: queue primitives and the executor."""
+"""Tests for the online runtime: queue primitives, the event log, and the
+executor."""
 import numpy as np
 import pytest
 
 from repro.core import LocalityQueues
-from repro.runtime import (AdaptiveSteal, DomainQueues, Executor, NoSteal,
-                           SubmissionPool)
+from repro.runtime import (AdaptiveSteal, DomainQueues, EventLog, Executor,
+                           NoSteal, SubmissionPool)
 
 
 class TestLocalityQueuesEdgeCases:
@@ -107,6 +108,59 @@ class TestSubmissionPool:
         assert p.pop() == 0
         assert not p.full and p.free_slots == 1
         assert [p.pop(), p.pop(), p.pop()] == [1, 2, None]
+
+
+class TestEventLog:
+    def test_ring_overflow_counts_vs_window(self):
+        # counts() covers the whole run even after the ring buffer drops
+        # the oldest events; len() is only the retained window.
+        log = EventLog(maxlen=8)
+        for i in range(20):
+            log.emit(step=i, kind="run", worker=0, domain=0, task_uid=i)
+        assert log.counts() == {"run": 20}
+        assert log.total == 20
+        assert len(log) == 8
+        assert log.dropped == 12
+        # the window keeps the *newest* events
+        assert [e.task_uid for e in log] == list(range(12, 20))
+
+    def test_csv_export_carries_window_marker(self):
+        log = EventLog(maxlen=4)
+        for i in range(6):
+            log.emit(step=i, kind="run", worker=0, domain=0, task_uid=i,
+                     cost=2.0)
+        lines = log.to_csv_lines()
+        assert lines[0].startswith("#")
+        assert "total=6" in lines[0] and "retained=4" in lines[0] \
+            and "dropped=2" in lines[0]
+        assert lines[1].split(",")[:2] == ["step", "kind"]
+        assert len(lines) == 2 + 4               # marker + header + window
+        assert lines[2].endswith(",2,0")         # cost,penalty columns
+
+    def test_steal_event_src_domain_is_victim_queue(self):
+        # worker 1 (domain 1) can only steal from domain 0's queue; the
+        # steal event must point at the victim, not the thief's domain.
+        ex = Executor(num_domains=2)
+        for i in range(4):
+            ex.submit(ex.make_task(payload=i, home=0))
+        ex.run_until_drained()
+        steals = [e for e in ex.events if e.kind == "steal"]
+        assert steals and all(e.src_domain == 0 for e in steals)
+        assert all(e.domain == 1 and e.worker == 1 for e in steals)
+        runs = [e for e in ex.events if e.kind == "run"]
+        assert all(e.src_domain == e.domain for e in runs)
+
+    def test_execution_events_carry_cost_and_penalty(self):
+        ex = Executor(num_domains=2,
+                      steal_penalty=lambda task, worker: 2.0 * task.cost)
+        for i in range(4):
+            ex.submit(ex.make_task(payload=i, home=0, cost=3.0))
+        ex.run_until_drained()
+        for e in ex.events:
+            if e.kind == "steal":
+                assert (e.cost, e.penalty, e.service) == (3.0, 6.0, 9.0)
+            elif e.kind == "run":
+                assert (e.cost, e.penalty) == (3.0, 0.0)
 
 
 def _submit_n(ex, n, homes):

@@ -1,0 +1,305 @@
+"""repro.trace: workloads, trace round-trip, deterministic replay, storms,
+measured-penalty feedback."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import trace
+from repro.runtime import AdaptiveSteal, Event, Executor, GreedySteal, Worker
+
+
+def _penalty(task, worker) -> float:
+    return 4.0 * task.cost
+
+
+def _recorded_run(workload=None, seed=0, steal_order="cyclic",
+                  steal_penalty=_penalty):
+    wl = workload or trace.hot_skew(
+        trace.poisson(rate=4, steps=24, num_domains=4, seed=seed),
+        hot_domain=0, p_hot=0.8, seed=seed)
+    rec = trace.TraceRecorder()
+    ex = rec.attach(Executor(4, steal_order=steal_order,
+                             steal_penalty=steal_penalty, seed=seed))
+    trace.drive(ex, wl)
+    return rec.finish(), ex
+
+
+class TestWorkloads:
+    def test_generators_deterministic_per_seed(self):
+        for gen in (lambda s: trace.poisson(3.0, 20, 4, seed=s),
+                    lambda s: trace.bursty(1.0, 8.0, 20, 4, seed=s),
+                    lambda s: trace.diurnal(6.0, 20, 4, seed=s)):
+            assert gen(5) == gen(5)
+            assert gen(5) != gen(6)
+
+    def test_arrivals_well_formed(self):
+        for wl in trace.standard_scenarios(num_domains=4, steps=32).values():
+            assert wl.n_tasks > 0
+            assert all(0 <= a.home < 4 for a in wl.arrivals)
+            assert all(a.step >= 0 and a.cost > 0 for a in wl.arrivals)
+            assert wl.horizon >= max(a.step for a in wl.arrivals)
+
+    def test_hot_skew_rehomes_requested_fraction(self):
+        base = trace.poisson(rate=5, steps=200, num_domains=4, seed=0)
+        hot = trace.hot_skew(base, hot_domain=2, p_hot=0.8, seed=1)
+        assert hot.n_tasks == base.n_tasks
+        frac = sum(a.home == 2 for a in hot.arrivals) / hot.n_tasks
+        assert 0.7 < frac < 0.95          # 0.8 target + base's 1/4 overlap
+
+    def test_lognormal_costs_heavy_tail(self):
+        wl = trace.lognormal_costs(
+            trace.poisson(rate=5, steps=100, num_domains=4, seed=0),
+            median=2.0, sigma=1.0, seed=3)
+        costs = [a.cost for a in wl.arrivals]
+        assert min(costs) > 0
+        assert max(costs) > np.median(costs) * 3   # tail present
+
+    def test_drive_lands_arrivals_on_step_clock(self):
+        wl = trace.poisson(rate=2, steps=10, num_domains=2, seed=0)
+        rec = trace.TraceRecorder()
+        ex = rec.attach(Executor(2))
+        trace.drive(ex, wl)
+        t = rec.finish()
+        recorded = sorted((s.step, s.home) for s in t.submissions)
+        expected = sorted((a.step, a.home) for a in wl.arrivals)
+        assert recorded == expected
+
+
+class TestTraceRoundTrip:
+    def test_jsonl_round_trip_lossless(self):
+        t, _ = _recorded_run()
+        t2 = trace.loads_lines(trace.dumps_lines(t))
+        assert t2.meta == t.meta
+        assert t2.submissions == t.submissions
+        assert t2.events == t.events
+        assert t2.stats == t.stats
+        assert t2.total_steps == t.total_steps
+        assert t2.event_counts == t.event_counts
+
+    def test_file_round_trip(self, tmp_path):
+        t, _ = _recorded_run()
+        path = tmp_path / "run.trace.jsonl"
+        trace.TraceWriter(path).write(t)
+        t2 = trace.TraceReader(path).read()
+        assert t2.submissions == t.submissions and t2.stats == t.stats
+
+    def test_unknown_schema_rejected(self):
+        t, _ = _recorded_run()
+        lines = trace.dumps_lines(t)
+        bad = [lines[0].replace('"schema": 1', '"schema": 99')] + lines[1:]
+        with pytest.raises(trace.TraceSchemaError):
+            trace.loads_lines(bad)
+
+    def test_headerless_trace_rejected(self):
+        t, _ = _recorded_run()
+        with pytest.raises(trace.TraceSchemaError):
+            trace.loads_lines(trace.dumps_lines(t)[1:])
+
+    def test_recorder_single_use(self):
+        rec = trace.TraceRecorder()
+        rec.attach(Executor(2))
+        with pytest.raises(RuntimeError):
+            rec.attach(Executor(2))
+
+
+class TestReplay:
+    def test_replay_reproduces_recorded_stats_bit_identical(self):
+        # write -> read -> replay, twice: both runs match the recorded
+        # stats exactly (the acceptance criterion).
+        t, _ = _recorded_run()
+        t = trace.loads_lines(trace.dumps_lines(t))
+        factory = lambda tr: trace.executor_from_meta(  # noqa: E731
+            tr, steal_penalty=_penalty)
+        r1 = trace.replay(t, factory, assert_match=True)
+        r2 = trace.replay(t, factory, assert_match=True)
+        assert r1.stats == r2.stats == {
+            k: t.stats[k] for k in r1.stats}
+
+    def test_replay_random_steal_order_deterministic(self):
+        t, _ = _recorded_run(steal_order="random", seed=3)
+        factory = lambda tr: trace.executor_from_meta(  # noqa: E731
+            tr, steal_penalty=_penalty)
+        trace.replay(t, factory, assert_match=True)
+
+    def test_replay_policy_ab_same_arrivals(self):
+        # same trace, different governor: total work identical, steal
+        # behaviour different (the A/B the subsystem exists for).
+        t, ex = _recorded_run()
+        assert ex.stats.stolen > 0
+        res = trace.replay(t, lambda tr: trace.executor_from_meta(
+            tr, governor=AdaptiveSteal(penalty_hint=4.0),
+            steal_penalty=_penalty))
+        assert res.executor.stats.executed == t.n_tasks
+        assert res.executor.stats.stolen < ex.stats.stolen
+
+    def test_replay_divergence_reported(self):
+        t, _ = _recorded_run()
+        # replaying without the recorded penalty function diverges on the
+        # steal_penalty stat -> assert_match must raise and say which key.
+        with pytest.raises(AssertionError, match="steal_penalty"):
+            trace.replay(t, lambda tr: trace.executor_from_meta(tr),
+                         assert_match=True)
+
+    def test_replay_requires_fresh_executor(self):
+        t, _ = _recorded_run()
+
+        def stale(tr):
+            ex = trace.executor_from_meta(tr, steal_penalty=_penalty)
+            ex.step()
+            return ex
+
+        with pytest.raises(ValueError):
+            trace.replay(t, stale)
+
+    def test_stencil_sweep_record_and_replay(self):
+        pytest.importorskip("jax")
+        from repro.stencil.jacobi import run_runtime_sweep
+
+        rng = np.random.default_rng(1)
+        f = rng.standard_normal((40, 6, 8)).astype(np.float32)
+        rec = trace.TraceRecorder()
+        out, stats = run_runtime_sweep(f, di=5, num_domains=4, trace=rec)
+        t = rec.finish()
+        assert t.n_tasks == 8 and t.stats["executed"] == stats.executed
+        trace.replay(t, assert_match=True)   # sweep pays no steal penalty
+
+
+class TestStorms:
+    def _events(self, spec):
+        # spec: list of (step, kind, worker) triples
+        return [Event(step=s, kind=k, worker=w, domain=w, task_uid=i)
+                for i, (s, k, w) in enumerate(spec)]
+
+    def test_windows_fold_counts(self):
+        evs = self._events([(0, "run", 0), (1, "steal", 1), (7, "idle", 0),
+                            (8, "run", 0)])
+        w0, w1 = trace.windows(evs, width=8)
+        assert (w0.start, w0.runs, w0.steals, w0.idles) == (0, 1, 1, 1)
+        assert (w1.start, w1.runs) == (8, 1)
+        assert w0.executed == 2 and w0.steal_fraction == 0.5
+
+    def test_detect_steal_storm_thresholds(self):
+        quiet = self._events([(0, "run", 0)] * 6 + [(0, "steal", 1)] * 2)
+        storm = self._events([(0, "run", 0)] * 2 + [(0, "steal", 1)] * 6)
+        assert trace.detect_steal_storms(quiet, width=8) == []
+        hits = trace.detect_steal_storms(storm, width=8)
+        assert len(hits) == 1 and hits[0].steal_fraction == 0.75
+        # too little evidence -> no storm, whatever the fraction
+        tiny = self._events([(0, "steal", 1)] * 2)
+        assert trace.detect_steal_storms(tiny, width=8,
+                                         min_executed=4) == []
+
+    def test_detect_inline_bursts(self):
+        evs = self._events([(0, "inline", 0)] * 3 + [(0, "run", 1)] * 5)
+        hits = trace.detect_inline_bursts(evs, width=8, frac=0.25)
+        assert len(hits) == 1 and hits[0].inlines == 3
+
+    def test_depth_imbalance_windows(self):
+        series = [(0, (4, 0, 0, 0)), (1, (1, 1, 1, 1)), (9, (0, 8, 0, 0))]
+        imb = dict(trace.depth_imbalance(series, width=8))
+        assert imb[0] == pytest.approx(3.0)     # 4 - mean(1)
+        assert imb[8] == pytest.approx(6.0)     # 8 - mean(2)
+
+    def test_render_timeline_marks_storms(self):
+        evs = self._events([(s, "steal", 1) for s in range(8)]
+                           + [(s, "run", 0) for s in range(8, 16)])
+        txt = trace.render_timeline(evs, num_workers=2, width=8)
+        lines = txt.splitlines()
+        assert any(ln.lstrip().startswith("w0") for ln in lines)
+        w1 = next(ln for ln in lines if ln.lstrip().startswith("w1"))
+        assert "S" in w1
+        assert "^" in lines[-1]                 # storm marker row
+        assert trace.render_timeline([], 2) == "(no events)"
+
+    def test_live_executor_storm_detected_under_skew(self):
+        t, ex = _recorded_run()
+        assert ex.stats.stolen > 0
+        assert trace.detect_steal_storms(t.events, width=4) != []
+
+
+class TestMeasuredPenalty:
+    def test_theta_within_observed_service_range(self):
+        # acceptance: MeasuredPenalty-fed AdaptiveSteal reaches a θ within
+        # the service-time range observed in the trace.
+        t, _ = _recorded_run()
+        services = [e.service for e in t.events
+                    if e.kind in ("run", "steal", "inline")]
+        gov = trace.MeasuredPenalty.from_trace(t)
+        assert min(services) <= gov.threshold <= max(services)
+        assert gov.observed_steals == t.stats["stolen"]
+
+    def test_from_trace_seeds_match_measured_means(self):
+        t, _ = _recorded_run()
+        gov = trace.MeasuredPenalty.from_trace(t)
+        pens = [e.penalty for e in t.events if e.kind == "steal"]
+        costs = [e.cost for e in t.events
+                 if e.kind in ("run", "steal", "inline")]
+        assert gov.penalty_estimate == pytest.approx(np.mean(pens))
+        assert gov.local_cost_estimate == pytest.approx(np.mean(costs))
+
+    def test_backpressure_inline_steals_counted_as_steals(self):
+        # a tiny pool forces the submitter to execute inline; with all work
+        # homed on the foreign domain those inline runs are steals and pay
+        # the penalty.  The penalty must feed θ's numerator, never inflate
+        # the local-cost denominator (else the feedback loop turns greedy
+        # exactly when stealing is most expensive).
+        rec = trace.TraceRecorder()
+        ex = rec.attach(Executor(2, pool_cap=1,
+                                 steal_penalty=lambda t, w: 10.0 * t.cost))
+        for i in range(8):
+            ex.submit(ex.make_task(payload=i, home=1))
+        ex.run_until_drained()
+        t = rec.finish()
+        inline_steals = [e for e in t.events
+                         if e.kind == "inline" and e.penalty > 0]
+        assert inline_steals, "scenario must provoke backpressure steals"
+        assert t.service_times()["steal"]        # classified by victim queue
+        gov = trace.MeasuredPenalty.from_trace(t)
+        assert gov.local_cost_estimate == pytest.approx(1.0)
+        assert gov.penalty_estimate == pytest.approx(10.0)
+        assert gov.threshold == 10
+        assert gov.observed_steals == t.stats["stolen"]
+
+    def test_from_trace_without_steals_defaults_greedy(self):
+        wl = trace.poisson(rate=2, steps=12, num_domains=2, seed=0)
+        rec = trace.TraceRecorder()
+        trace.drive(rec.attach(Executor(2)), wl)
+        t = rec.finish()
+        if t.stats["stolen"] == 0:
+            gov = trace.MeasuredPenalty.from_trace(t)
+            assert gov.threshold >= 1
+
+    def test_online_learning_tracks_costs_and_penalties(self):
+        gov = trace.MeasuredPenalty(ema=0.5)
+        w = Worker(0, 0)
+        for _ in range(20):
+            gov.on_execute(w, stolen=False, penalty=0.0, cost=2.0)
+        assert gov.local_cost_estimate == pytest.approx(2.0, rel=0.01)
+        for _ in range(20):
+            gov.on_execute(w, stolen=True, penalty=8.0, cost=2.0)
+        assert gov.penalty_estimate == pytest.approx(8.0, rel=0.01)
+        assert gov.threshold == 4                # 8 / 2
+
+    def test_live_run_with_measured_governor_steals_less_than_greedy(self):
+        wl = trace.hot_skew(trace.poisson(rate=4, steps=30, num_domains=4,
+                                          seed=2), p_hot=0.85, seed=2)
+
+        def run(gov):
+            ex = Executor(4, governor=gov, steal_penalty=_penalty, seed=2)
+            trace.drive(ex, wl)
+            return ex.stats
+
+        greedy = run(GreedySteal())
+        measured = run(trace.MeasuredPenalty())
+        assert measured.executed == greedy.executed == wl.n_tasks
+        assert measured.stolen < greedy.stolen
+        assert measured.steal_penalty < greedy.steal_penalty
+
+
+class TestArrivalDataclasses:
+    def test_workload_frozen_and_replaceable(self):
+        wl = trace.poisson(rate=1, steps=4, num_domains=2, seed=0)
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            wl.name = "x"
+        assert dataclasses.replace(wl, name="y").name == "y"
