@@ -2,7 +2,7 @@
 # works without an editable install.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test smoke bench trace
+.PHONY: test smoke bench trace control
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -21,3 +21,9 @@ bench:
 trace:
 	$(PY) examples/trace_stencil.py
 	$(PY) -m benchmarks.trace_replay --fast
+
+# control-plane smoke: self-tuning serving demo (token-identity checked),
+# then controlled-vs-uncontrolled replay A/B (writes BENCH_control.json)
+control:
+	$(PY) examples/control_serving.py
+	$(PY) -m benchmarks.control_plane --fast

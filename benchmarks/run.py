@@ -72,6 +72,22 @@ def main() -> None:
                     f"hot_measured_penalty_save="
                     f"{1 - hot_meas / max(hot_greedy, 1):.2f},theta={theta}"))
 
+    from benchmarks import control_plane
+    t0 = time.time()
+    lines = control_plane.main(steps=96 if full else 24,
+                               json_path="BENCH_control.json")
+    dt = time.time() - t0
+    _block("Control plane: controlled vs uncontrolled on recorded traces",
+           lines)
+    rows = {tuple(l.split(",")[:2]): l.split(",") for l in lines[1:]}
+    thr_un = float(rows[("hot_skew", "uncontrolled")][4])
+    thr_co = float(rows[("hot_skew", "controlled")][4])
+    storms = sum(int(r[8]) for k, r in rows.items() if k[1] == "uncontrolled")
+    storms_co = sum(int(r[8]) for k, r in rows.items() if k[1] == "controlled")
+    summary.append(("control_plane", dt * 1e6 / max(len(lines), 1),
+                    f"hot_thr_gain={thr_co / max(thr_un, 1e-9):.2f}x,"
+                    f"storms={storms}->{storms_co}"))
+
     from benchmarks import table1_stream
     t0 = time.time()
     lines = table1_stream.main()

@@ -1,0 +1,90 @@
+"""Continuous batching: adapt the executor's batch-grab size online.
+
+A batch grab amortizes one scheduling round over several same-queue tasks
+(``Executor(batch=...)``): the bigger the batch, the higher the per-round
+throughput — but also the longer one grab monopolizes a worker, so batches
+must shrink when tasks get expensive (long prefills) and may grow when
+tasks are cheap.  ``BatchGovernor`` closes that loop from measurements: it
+tracks an EMA of the per-task service actually delivered per batch (task
+cost plus any steal penalty — the deterministic service proxy used across
+the repo, so controlled runs stay replayable) and sizes the next batch to
+fit a fixed per-grab service budget:
+
+    size = clamp(round(target_service / per_task_service), batch_min, batch_cap)
+
+The governor also exposes ``target_service`` as the grab's cost ``budget``
+(the executor stops draining before a batch's summed cost exceeds it), so
+every grab delivers ≈ ``target_service`` cost units per round regardless of
+the cost mix — cheap tasks run wide, one long prefill fills the budget
+alone.  That constant cost-per-round drain rate is what makes a queue's
+total queued cost an honest backlog-*time* estimate, i.e. what makes
+``CostRouter``'s join-shortest-work routing correct.
+
+Steal penalties inflate measured service, so batches automatically thin
+out exactly when grabs start migrating work — the batching analogue of the
+``AdaptiveSteal`` throttle.
+"""
+from __future__ import annotations
+
+_MIN_SERVICE = 1e-9
+
+
+class BatchGovernor:
+    """Adaptive batch-size policy for ``Executor(batch=...)``.
+
+    Implements the executor's batch-policy duck type: a ``size`` property
+    read before each grab and an ``on_batch(n_tasks, service)`` feedback
+    call after it.
+
+    Parameters
+    ----------
+    target_service:  service budget (cost units) one grab should fill.
+    batch_min/cap:   hard clamp on the adapted size.
+    ema:             smoothing of the per-task service estimate in (0, 1].
+    init_size:       batch size before the first measurement.
+    """
+
+    def __init__(self, target_service: float = 8.0, batch_min: int = 1,
+                 batch_cap: int = 8, ema: float = 0.25, init_size: int = 1):
+        if target_service <= 0:
+            raise ValueError("target_service must be positive")
+        if not 1 <= batch_min <= batch_cap:
+            raise ValueError("need 1 <= batch_min <= batch_cap")
+        if not 0.0 < ema <= 1.0:
+            raise ValueError("ema must be in (0, 1]")
+        self.target_service = target_service
+        self.batch_min = batch_min
+        self.batch_cap = batch_cap
+        self.ema = ema
+        self._size = min(max(init_size, batch_min), batch_cap)
+        self._per_task: float | None = None
+        self.batches = 0
+        self.tasks = 0
+
+    @property
+    def size(self) -> int:
+        """Batch-grab limit for the next grab."""
+        return self._size
+
+    @property
+    def budget(self) -> float:
+        """Cost budget per grab (the executor's budgeted drain bound)."""
+        return self.target_service
+
+    @property
+    def service_estimate(self) -> float | None:
+        """EMA of per-task service over observed batches (None pre-warmup)."""
+        return self._per_task
+
+    def on_batch(self, n_tasks: int, service: float) -> None:
+        """Feed one executed grab: ``n_tasks`` served, ``service`` total
+        cost+penalty delivered.  Called by the executor after every grab."""
+        if n_tasks < 1:
+            return
+        per = max(service / n_tasks, _MIN_SERVICE)
+        self._per_task = (per if self._per_task is None else
+                          (1 - self.ema) * self._per_task + self.ema * per)
+        self._size = min(max(round(self.target_service / self._per_task),
+                             self.batch_min), self.batch_cap)
+        self.batches += 1
+        self.tasks += n_tasks

@@ -1,0 +1,129 @@
+"""Storm-triggered steal circuit-breaker.
+
+``repro.trace.storms`` detects steal storms *offline*: windows where the
+balance mechanism degenerated into bulk work migration, paying the nonlocal
+penalty on most tasks (the paper's Fig. 4 degraded dynamic runs).
+``StormBreaker`` runs the same windowed detector *online* — over the live
+executor's streaming counters, not a recorded trace — and acts on it: while
+a storm (or a backpressure inline burst) is in progress, stealing is
+temporarily throttled by raising the inner governor's depth threshold, or
+cut entirely, then re-enabled after a cool-down of quiet windows.
+
+This deliberately bends the paper's balance-over-locality rule (§2.2), but
+only transiently and only in the regime where the paper's own evidence says
+the rule misfires: when *most* executed tasks in a window are steals, the
+backlog is structural (a hot domain, not a momentarily idle one) and every
+steal pays the nonlocal penalty without fixing the imbalance.  Once the
+cool-down lapses, greedy balance wins again in the limit — same contract as
+``AdaptiveSteal``'s idle decay.
+
+The breaker is a ``StealGovernor`` decorator: wrap any inner governor and
+install the breaker in its place (``ControlLoop.attach`` does both).  Its
+detector reads only ``RuntimeStats`` counter deltas, so it works with event
+recording disabled and is deterministic under replay.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from ..runtime import Executor, GreedySteal, StealGovernor, Worker
+
+MODES = ("raise", "block")
+
+
+class StormBreaker(StealGovernor):
+    """Windowed steal-storm detector + governor decorator.
+
+    Parameters
+    ----------
+    inner:         the governor to decorate; ``ControlLoop.attach`` fills in
+                   the executor's current governor when None.
+    width:         detector window width in scheduling rounds.
+    steal_frac:    steal fraction of executed tasks that trips the breaker.
+    inline_frac:   inline (backpressure) fraction that trips it.
+    min_executed:  evidence floor per window (tiny windows never trip).
+    cooldown:      windows the breaker stays tripped after the last
+                   detection; a storm during cool-down re-arms it.
+    mode:          "raise" adds ``boost`` to the inner governor's victim
+                   depth threshold while tripped; "block" forbids stealing
+                   outright.
+    """
+
+    def __init__(self, inner: StealGovernor | None = None, *,
+                 width: int = 8, steal_frac: float = 0.5,
+                 inline_frac: float = 0.25, min_executed: int = 4,
+                 cooldown: int = 3, mode: str = "raise", boost: int = 8):
+        if width < 1:
+            raise ValueError("window width must be >= 1")
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r} (want one of {MODES})")
+        self.inner = inner
+        self.width = width
+        self.steal_frac = steal_frac
+        self.inline_frac = inline_frac
+        self.min_executed = min_executed
+        self.cooldown = cooldown
+        self.mode = mode
+        self.boost = boost
+        self.trips = 0               # distinct storm episodes
+        self._cooldown_left = 0      # windows until stealing re-enables
+        self._last_step = 0
+        self._seen = (0, 0, 0)       # (executed, stolen, inline) snapshot
+
+    # -- governor face -------------------------------------------------------
+    @property
+    def _inner(self) -> StealGovernor:
+        return self.inner if self.inner is not None else _GREEDY
+
+    @property
+    def tripped(self) -> bool:
+        return self._cooldown_left > 0
+
+    def min_victim_depth(self, worker: Worker) -> Optional[int]:
+        base = self._inner.min_victim_depth(worker)
+        if not self.tripped:
+            return base
+        if self.mode == "block" or base is None:
+            return None
+        return base + self.boost
+
+    def on_idle(self, worker: Worker) -> None:
+        self._inner.on_idle(worker)
+
+    def on_execute(self, worker: Worker, stolen: bool, penalty: float,
+                   cost: float = 1.0) -> None:
+        self._inner.on_execute(worker, stolen, penalty, cost)
+
+    # -- detector face -------------------------------------------------------
+    def observe(self, executor: Executor) -> None:
+        """Fold the counters accumulated since the last window boundary.
+
+        Call every step (``ControlLoop`` does, via the executor's
+        ``step_hook``); it only acts once per ``width`` rounds.
+        """
+        step = executor.step_count
+        if step - self._last_step < self.width:
+            return
+        self._last_step = step
+        s = executor.stats
+        now = (s.executed, s.stolen, s.inline_runs)
+        executed, stolen, inline = (a - b for a, b in zip(now, self._seen))
+        self._seen = now
+        self.observe_window(executed, stolen, inline)
+
+    def observe_window(self, executed: int, stolen: int, inline: int) -> None:
+        """One detector window: trip on a steal storm or an inline burst,
+        otherwise let the cool-down tick down."""
+        if self._cooldown_left > 0:
+            self._cooldown_left -= 1
+        if executed < self.min_executed:
+            return
+        storm = stolen / executed >= self.steal_frac
+        burst = inline / executed >= self.inline_frac
+        if storm or burst:
+            if self._cooldown_left == 0:
+                self.trips += 1
+            self._cooldown_left = self.cooldown
+
+
+_GREEDY = GreedySteal()

@@ -1,0 +1,88 @@
+"""Cost-aware routing: pick submit domains by estimated backlog time.
+
+The paper routes a task to the domain that owns its data and lets the steal
+scan fix imbalance after the fact (§2.2: balance over locality, applied at
+*dequeue* time).  Under heavy-tailed task costs that is too late: a queue
+that is short in *items* can be the longest in *work*, and round-robin (or
+home) routing keeps feeding it.  ``CostRouter`` moves the balance decision
+to *submit* time, where it is free — re-routing a task before it is
+enqueued migrates no data, while fixing the same imbalance later via a
+steal pays the nonlocal penalty.
+
+The estimate is the classic join-shortest-work heuristic: a domain's
+backlog time is its queued cost (``DomainQueues.queue_costs``, maintained
+O(1) per enqueue/dequeue) divided by the number of workers pinned to it.
+Queued cost measures drain *time* exactly when grabs deliver a fixed cost
+budget per round — i.e. under ``BatchGovernor``'s budgeted continuous
+batching, the configuration ``ControlLoop.full`` wires up.  (Without
+batching this executor serves one item per worker-round whatever it costs,
+and depth, not cost, is the wait; the two controllers are designed as a
+pair, not as independent toggles.)
+Homed tasks stay home unless the home's backlog exceeds the best domain's
+by more than ``spill_penalty`` — i.e. a task is only sent away from its
+data when the queueing-delay gap is worth more than the nonlocal access it
+will pay (the same θ-style trade the ``AdaptiveSteal`` governor prices on
+the dequeue side).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from ..runtime import Executor, Task
+
+
+class CostRouter:
+    """Route submissions to the domain with the least estimated backlog time.
+
+    Parameters
+    ----------
+    spill_penalty:  backlog-time gap (in cost units) a homed task's home
+                    queue must exceed before the task is re-routed to the
+                    cheapest domain; 0 makes every task join the shortest
+                    work queue, ``None`` never spills homed tasks (pure
+                    locality routing for homed, cost routing for homeless).
+    """
+
+    def __init__(self, spill_penalty: Optional[float] = 4.0):
+        self.spill_penalty = spill_penalty
+        self._ex: Optional[Executor] = None
+        self._workers_per_domain: list[int] = []
+        self.routed = 0
+        self.spilled = 0     # homed tasks sent away from their home
+
+    def bind(self, executor: Executor) -> "CostRouter":
+        """Point the router at ``executor``'s queues/worker layout (done by
+        ``ControlLoop.attach``; call directly for standalone use)."""
+        self._ex = executor
+        counts = [0] * executor.num_domains
+        for w in executor.pool:
+            counts[w.domain] += 1
+        self._workers_per_domain = counts
+        return self
+
+    def backlog_time(self, domain: int) -> float:
+        """Estimated wait a task routed to ``domain`` sees: queued cost over
+        pinned workers (inf for domains no worker serves — they only drain
+        via steals, so the router never feeds them directly)."""
+        if self._ex is None:
+            raise RuntimeError("CostRouter is not bound to an executor")
+        workers = self._workers_per_domain[domain]
+        if workers == 0:
+            return math.inf
+        return self._ex.queues.cost(domain) / workers
+
+    def route(self, task: Task) -> int:
+        """Submit domain for ``task``: least-backlog, home-sticky up to
+        ``spill_penalty`` (the ``Executor(router=...)`` callback)."""
+        backlogs = [self.backlog_time(d)
+                    for d in range(self._ex.num_domains)]
+        best = min(range(len(backlogs)), key=lambda d: (backlogs[d], d))
+        self.routed += 1
+        home = task.home
+        if 0 <= home < len(backlogs) and backlogs[home] < math.inf:
+            if (self.spill_penalty is None
+                    or backlogs[home] - backlogs[best] <= self.spill_penalty):
+                return home
+            self.spilled += 1
+        return best

@@ -27,7 +27,10 @@ Paper-concept map (Wittmann & Hager, 2010):
 
 The table continues in ``repro/trace/__init__.py`` — workload generation,
 trace export, deterministic replay, and steal-storm analysis over these
-primitives (record a run via ``Executor(submit_hook=...)``).
+primitives (record a run via ``Executor(submit_hook=...)``) — and in
+``repro/control/__init__.py`` — the online control plane that adjusts
+routing, batch size, and the steal threshold through the executor's
+``router``/``batch``/``governor``/``step_hook`` knobs.
 
 Usage::
 

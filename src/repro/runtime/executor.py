@@ -45,8 +45,11 @@ class Task:
 
 
 Handler = Callable[[Task, Worker], Any]
+BatchHandler = Callable[[list, Worker], list]    # (tasks, worker) -> results
 PenaltyFn = Callable[[Task, Worker], float]
 SubmitHook = Callable[[Task, int, int], None]   # (task, routed_domain, step)
+Router = Callable[[Task], int]                  # task -> submit domain
+StepHook = Callable[["Executor"], None]         # fired after each step()
 
 
 def _default_handler(task: Task, worker: Worker) -> Any:
@@ -67,7 +70,8 @@ class Executor:
                         Defaults to calling the payload if it is callable.
     pool_cap:           bound on queued-but-unrun tasks (§2.1); ``None``
                         disables backpressure.
-    steal_order:        "cyclic" (paper §2.2), "longest", or "random".
+    steal_order:        "cyclic" (paper §2.2), "longest", "random", or
+                        "cost_weighted" (victim = most queued cost).
     governor:           a ``StealGovernor``; default ``GreedySteal``.
     steal_penalty:      ``(task, worker) -> cost`` charged on steals (e.g.
                         re-prefill tokens); accounted in the metrics.
@@ -76,6 +80,30 @@ class Executor:
                         as each task is enqueued — the recording surface used
                         by ``repro.trace.TraceRecorder`` to capture a
                         replayable submission trace.
+    router:             optional ``task -> domain`` routing policy consulted
+                        on ``submit(task, domain=None)`` *before* the default
+                        home/round-robin rule (``repro.control.CostRouter``
+                        plugs in here).  The router sees ``task.home`` and
+                        may keep or override it.
+    batch:              batch-grab limit per ``_attempt``: an int (static
+                        limit, default 1 = the PR-1 behaviour) or any object
+                        with a ``size`` property and an
+                        ``on_batch(n_tasks, service)`` method (an adaptive
+                        policy, e.g. ``repro.control.BatchGovernor``).  After
+                        a worker's dequeue picks a source queue, up to
+                        ``batch-1`` more tasks are drained from that same
+                        queue and executed in one grab (continuous batching:
+                        one scheduling round serves a whole batch).  A policy
+                        may also expose a ``budget`` (float): the grab then
+                        stops before exceeding that much summed task cost
+                        (token-budget batching).
+    batch_handler:      ``(tasks, worker) -> results`` called with each grab's
+                        task list (length 1..batch).  When None, ``handler``
+                        is called per task.  Results align with tasks;
+                        non-None entries are collected.
+    step_hook:          optional ``(executor) -> None`` fired at the end of
+                        every ``step()`` — the control plane's drive point
+                        (``repro.control.ControlLoop`` plugs in here).
     """
 
     def __init__(self, num_domains: int,
@@ -88,7 +116,11 @@ class Executor:
                  seed: int = 0,
                  record_events: bool = True,
                  event_maxlen: int = 65536,
-                 submit_hook: SubmitHook | None = None):
+                 submit_hook: SubmitHook | None = None,
+                 router: Router | None = None,
+                 batch: Any = 1,
+                 batch_handler: BatchHandler | None = None,
+                 step_hook: StepHook | None = None):
         self.num_domains = num_domains
         self.seed = seed
         self.rng = np.random.default_rng(seed)
@@ -107,6 +139,10 @@ class Executor:
         self.metrics = MetricsRecorder()
         self.events = EventLog(event_maxlen) if record_events else None
         self.submit_hook = submit_hook
+        self.router = router
+        self.batch = batch
+        self.batch_handler = batch_handler
+        self.step_hook = step_hook
         self.results: list[Any] = []
         self._uids = itertools.count()
         self._rr = 0
@@ -118,21 +154,41 @@ class Executor:
         return Task(uid=next(self._uids), payload=payload, home=home, cost=cost)
 
     def next_round_robin(self) -> int:
-        d = self._rr % self.num_domains
-        self._rr += 1
+        """Next submit domain in round-robin order, skipping hot domains.
+
+        A domain whose queue depth exceeds 2x the mean depth is skipped (its
+        turn is forfeited, not deferred), so round-robin routing cannot keep
+        force-feeding a backlogged domain while others idle.  At most one
+        pass is made: since not every depth can exceed twice the mean, an
+        eligible domain always exists, and with balanced queues this
+        degenerates to the plain cycle.
+        """
+        sizes = self.queues.queue_sizes()
+        cap = 2.0 * sum(sizes) / len(sizes)
+        for _ in range(self.num_domains):
+            d = self._rr % self.num_domains
+            self._rr += 1
+            if sizes[d] <= cap:
+                break
         return d
 
     def submit(self, task: Task, domain: int | None = None) -> None:
         """Route ``task`` into a domain queue, applying backpressure.
 
-        ``domain=None`` routes to the task's home domain, or round-robin for
-        homeless tasks.  When the pool is full, the submitter executes
-        queued tasks inline (greedily, ignoring the governor — the §2.1
-        "submitting thread is used for processing tasks" rule) until a slot
-        frees up, so the pool bound is a hard invariant.
+        ``domain=None`` asks the ``router`` (when one is attached), else
+        routes to the task's home domain, or round-robin for homeless tasks.
+        When the pool is full, the submitter executes queued tasks inline
+        (greedily, ignoring the governor — the §2.1 "submitting thread is
+        used for processing tasks" rule) until a slot frees up, so the pool
+        bound is a hard invariant.
         """
         if domain is None:
-            domain = task.home if task.home >= 0 else self.next_round_robin()
+            if self.router is not None:
+                domain = int(self.router(task))
+            elif task.home >= 0:
+                domain = task.home
+            else:
+                domain = self.next_round_robin()
         if not 0 <= domain < self.num_domains:
             raise ValueError(f"domain {domain} out of range")
         while self.pool_cap is not None and len(self.queues) >= self.pool_cap:
@@ -147,12 +203,15 @@ class Executor:
 
     # -- execution side -----------------------------------------------------
     def step(self) -> int:
-        """One scheduling round: every worker attempts one task.  Returns
-        the number of tasks executed.  Interleave with ``submit`` for
-        online (arrival-driven) operation."""
+        """One scheduling round: every worker attempts one grab (up to
+        ``batch`` tasks from a single queue).  Returns the number of tasks
+        executed.  Interleave with ``submit`` for online (arrival-driven)
+        operation."""
         self._step += 1
-        n = sum(1 for w in self.pool if self._attempt(w))
+        n = sum(self._attempt(w) for w in self.pool)
         self.metrics.sample_depths(self._step, self.queues.queue_sizes())
+        if self.step_hook is not None:
+            self.step_hook(self)
         return n
 
     def run_until_drained(self) -> list[Any]:
@@ -172,7 +231,18 @@ class Executor:
         out, self.results = self.results, []
         return out
 
-    def _attempt(self, worker: Worker, inline: bool = False) -> bool:
+    @property
+    def batch_max(self) -> int:
+        """Current effective batch-grab limit (>= 1)."""
+        size = getattr(self.batch, "size", self.batch)
+        return max(int(size), 1)
+
+    def _attempt(self, worker: Worker, inline: bool = False) -> int:
+        """One grab by ``worker``: dequeue (local-first, governed steal),
+        then drain up to ``batch_max - 1`` more tasks from the same source
+        queue and execute the batch.  Returns the number of tasks executed
+        (0 when nothing was eligible).  Inline (backpressure) grabs stay
+        single-task: the submitter only helps enough to free one slot."""
         if inline:
             got = self.queues.dequeue(worker.domain)
         else:
@@ -187,26 +257,45 @@ class Executor:
             self.governor.on_idle(worker)
             self._emit("idle", worker=worker.wid, domain=worker.domain,
                        task_uid=-1)
-            return False
-        task: Task = got.item
+            return 0
+        tasks: list[Task] = [got.item]
+        if not inline:
+            limit = self.batch_max
+            if limit > 1:
+                tasks += self.queues.drain(
+                    got.domain, limit - 1,
+                    budget=getattr(self.batch, "budget", None),
+                    spent=got.item.cost)
         stolen = got.stolen
-        local = not stolen and task.home == worker.domain
-        penalty = 0.0
-        if stolen and self.steal_penalty is not None:
-            penalty = float(self.steal_penalty(task, worker))
-        result = self.handler(task, worker)
-        worker.stats.executed += 1
-        worker.stats.local += int(local)
-        worker.stats.stolen += int(stolen)
-        self.metrics.on_execute(local, stolen, penalty, inline)
-        self.governor.on_execute(worker, stolen, penalty, task.cost)
+        penalties = [float(self.steal_penalty(t, worker))
+                     if stolen and self.steal_penalty is not None else 0.0
+                     for t in tasks]
+        if self.batch_handler is not None:
+            results = list(self.batch_handler(tasks, worker))
+            if len(results) != len(tasks):
+                raise ValueError(
+                    f"batch_handler returned {len(results)} results "
+                    f"for {len(tasks)} tasks")
+        else:
+            results = [self.handler(t, worker) for t in tasks]
         kind = "inline" if inline else ("steal" if stolen else "run")
-        self._emit(kind, worker=worker.wid, domain=worker.domain,
-                   task_uid=task.uid, src_domain=got.domain,
-                   cost=task.cost, penalty=penalty)
-        if result is not None:
-            self.results.append(result)
-        return True
+        for task, penalty, result in zip(tasks, penalties, results):
+            local = not stolen and task.home == worker.domain
+            worker.stats.executed += 1
+            worker.stats.local += int(local)
+            worker.stats.stolen += int(stolen)
+            self.metrics.on_execute(local, stolen, penalty, inline)
+            self.governor.on_execute(worker, stolen, penalty, task.cost)
+            self._emit(kind, worker=worker.wid, domain=worker.domain,
+                       task_uid=task.uid, src_domain=got.domain,
+                       cost=task.cost, penalty=penalty)
+            if result is not None:
+                self.results.append(result)
+        on_batch = getattr(self.batch, "on_batch", None)
+        if on_batch is not None and not inline:
+            service = sum(t.cost for t in tasks) + sum(penalties)
+            on_batch(len(tasks), service)
+        return len(tasks)
 
     def _emit(self, kind: str, worker: int, domain: int, task_uid: int,
               src_domain: int = -1, cost: float = 0.0,

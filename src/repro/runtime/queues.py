@@ -8,14 +8,26 @@ policies (`repro.core.scheduler`) and the online serving router
 (`repro.serving.engine`) route through this class — there is no second
 copy of the steal-scan logic anywhere.
 
-Three steal scans are supported:
+Four steal scans are supported:
 
-  ``cyclic``   — the paper's scan: victims visited in domain order starting
-                 right after the caller's own domain (§2.2).
-  ``longest``  — steal from the deepest foreign queue (the serving router's
-                 balance-first variant; ties break on lowest domain id).
-  ``random``   — uniform random victim among eligible queues (models TBB's
-                 random stealing, §3.1); requires an ``rng``.
+  ``cyclic``        — the paper's scan: victims visited in domain order
+                      starting right after the caller's own domain (§2.2).
+  ``longest``       — steal from the deepest foreign queue (the serving
+                      router's balance-first variant; ties break on lowest
+                      domain id).
+  ``random``        — uniform random victim among eligible queues (models
+                      TBB's random stealing, §3.1); requires an ``rng``.
+  ``cost_weighted`` — steal from the foreign queue holding the most queued
+                      *cost* (sum of item ``cost`` attributes, 1.0 when
+                      absent; ties break on lowest domain id).  With
+                      heavy-tailed service costs a short queue can hide the
+                      biggest backlog; this scan relieves the domain with
+                      the most queued *work*, not the most queued *items*
+                      (the ``repro.control`` cost-aware victim selection).
+
+Queued cost is tracked per domain on every enqueue/dequeue (``cost`` /
+``queue_costs``), so cost-aware routing and victim selection are O(domains)
+reads, never a queue walk.
 
 ``SubmissionPool`` captures the other half of the paper's machinery: the
 bounded FIFO pool of submitted-but-unconsumed tasks of OpenMP tasking
@@ -45,7 +57,7 @@ class Popped:
 class DomainQueues:
     """Per-domain FIFO queues with a local-first dequeue and a steal scan."""
 
-    STEAL_ORDERS = ("cyclic", "longest", "random")
+    STEAL_ORDERS = ("cyclic", "longest", "random", "cost_weighted")
 
     def __init__(self, num_domains: int, steal_order: str = "cyclic",
                  rng: np.random.Generator | None = None):
@@ -60,11 +72,17 @@ class DomainQueues:
         self.steal_order = steal_order
         self._rng = rng
         self._queues: list[deque[Any]] = [deque() for _ in range(num_domains)]
+        self._costs: list[float] = [0.0] * num_domains
         self._size = 0
+
+    @staticmethod
+    def _item_cost(item: Any) -> float:
+        return float(getattr(item, "cost", 1.0))
 
     # -- producer side -----------------------------------------------------
     def enqueue(self, item: Any, domain: int) -> None:
         self._queues[domain].append(item)
+        self._costs[domain] += self._item_cost(item)
         self._size += 1
 
     # -- consumer side -----------------------------------------------------
@@ -77,15 +95,47 @@ class DomainQueues:
         larger values are the adaptive governor's depth threshold).
         """
         if self._queues[domain]:
-            self._size -= 1
-            return Popped(self._queues[domain].popleft(), domain, False)
+            return Popped(self._pop(domain), domain, False)
         if not allow_steal:
             return None
         victim = self._pick_victim(domain, max(min_victim, 1))
         if victim is None:
             return None
+        return Popped(self._pop(victim), victim, True)
+
+    def _pop(self, domain: int) -> Any:
+        item = self._queues[domain].popleft()
         self._size -= 1
-        return Popped(self._queues[victim].popleft(), victim, True)
+        if self._queues[domain]:
+            self._costs[domain] -= self._item_cost(item)
+        else:
+            self._costs[domain] = 0.0    # re-zero: no float residue on empty
+        return item
+
+    def drain(self, domain: int, n: int, budget: Optional[float] = None,
+              spent: float = 0.0) -> list[Any]:
+        """Pop up to ``n`` more items from ``domain``'s queue, FIFO, no steal
+        scan — the executor's batch-grab primitive: after a dequeue picked a
+        source queue, the rest of the batch is taken from the *same* queue so
+        a batch never mixes locality domains.
+
+        ``budget`` bounds the grab by *cost*, not just count: draining stops
+        before an item that would push ``spent`` (cost already in the batch)
+        past the budget.  That is the token-budget form of continuous
+        batching — a grab of cheap items runs wide, one expensive item fills
+        the whole budget alone — and is what makes a queue's total cost an
+        honest estimate of its drain *time*.
+        """
+        out = []
+        while n > 0 and self._queues[domain]:
+            if budget is not None:
+                nxt = self._item_cost(self._queues[domain][0])
+                if spent + nxt > budget:
+                    break
+                spent += nxt
+            out.append(self._pop(domain))
+            n -= 1
+        return out
 
     def _pick_victim(self, domain: int, min_victim: int) -> Optional[int]:
         if self.steal_order == "cyclic":
@@ -100,6 +150,8 @@ class DomainQueues:
             return None
         if self.steal_order == "longest":
             return max(eligible, key=lambda d: (len(self._queues[d]), -d))
+        if self.steal_order == "cost_weighted":
+            return max(eligible, key=lambda d: (self._costs[d], -d))
         return int(eligible[int(self._rng.integers(len(eligible)))])
 
     # -- introspection -----------------------------------------------------
@@ -111,6 +163,14 @@ class DomainQueues:
 
     def depth(self, domain: int) -> int:
         return len(self._queues[domain])
+
+    def cost(self, domain: int) -> float:
+        """Total queued cost in ``domain``'s queue (sum of item ``cost``
+        attributes; items without one count 1.0)."""
+        return self._costs[domain]
+
+    def queue_costs(self) -> list[float]:
+        return list(self._costs)
 
 
 class SubmissionPool:

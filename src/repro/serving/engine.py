@@ -30,6 +30,17 @@ policy while the steal/local statistics differ as the paper predicts.
 Pass ``trace=repro.trace.TraceRecorder()`` to record the router's behaviour
 as a replayable trace (steal-storm analysis / offline policy A/B without
 re-running the model).
+
+Continuous batching (``batch=``): a free replica drains up to ``batch``
+queued requests from one queue per scheduling round and serves them as one
+grab (``Executor(batch=...)`` + ``Replica.run_batch``) — pass an int or an
+adaptive ``repro.control.BatchGovernor``.  Each request in the grab still
+runs its own prefill + decode on its own cache, so batched serving is
+token-identical to unbatched under every routing policy (the bit-identity
+contract; a fused padded-batch decode is a later kernel-level step).  Pass
+``control=repro.control.ControlLoop(...)`` to attach the full control
+plane (cost routing, adaptive batching, the steal circuit-breaker) to the
+engine's router.
 """
 from __future__ import annotations
 
@@ -94,6 +105,17 @@ class Replica:
             pos += 1
         return req
 
+    def run_batch(self, reqs: list[Request]) -> list[Request]:
+        """Serve one coalesced grab of requests on this replica.
+
+        Requests are decoded per-request on their own caches (the compiled
+        prefill/decode functions are shared), so the batch is token-identical
+        to serving each request alone — the batching win lives in the
+        scheduler (one routing round, one queue grab, one cache arena touch
+        per batch), not in fused device math yet.
+        """
+        return [self.run(r) for r in reqs]
+
 
 class ServingEngine:
     """Replicas as locality domains over a ``runtime.Executor``."""
@@ -101,7 +123,9 @@ class ServingEngine:
     def __init__(self, model: Model, params: Any, num_replicas: int = 2,
                  max_seq: int = 128, policy: str = "locality",
                  pool_cap: Optional[int] = 256,
-                 trace: Optional[TraceRecorder] = None):
+                 trace: Optional[TraceRecorder] = None,
+                 batch: Any = 1,
+                 control: Optional[Any] = None):
         if policy not in POLICIES:
             raise ValueError(policy)
         self.policy = policy
@@ -112,13 +136,23 @@ class ServingEngine:
         num_domains = 1 if policy == "single_queue" else num_replicas
         worker_domains = ([0] * num_replicas if policy == "single_queue"
                           else list(range(num_replicas)))
+        # every grab (batched or size 1) goes through the batch handler, so
+        # there is exactly one accounting/migration path
         self._exec = Executor(
             num_domains, worker_domains,
-            handler=self._run_request,
+            batch=batch,
+            batch_handler=self._run_grab,
             steal_order="longest",
             steal_penalty=self._steal_penalty,
             pool_cap=pool_cap,
         )
+        # optional control plane (repro.control.ControlLoop): cost routing,
+        # adaptive batch sizing, storm circuit-breaking on this router.
+        # Attached before the trace recorder so a recorded header names the
+        # effective (possibly breaker-wrapped) governor.
+        self.control = control
+        if control is not None:
+            control.attach(self._exec)
         # optional trace hook: record this engine's routing/steal behaviour
         # as a replayable repro.trace trace (request payloads stay opaque;
         # the submission stream carries home replica + prompt-length cost).
@@ -134,13 +168,16 @@ class ServingEngine:
         req: Request = task.payload
         return float(len(req.tokens)) if req.home_replica >= 0 else 0.0
 
-    def _run_request(self, task: Task, worker: Worker) -> Request:
-        req: Request = task.payload
+    def _touch(self, req: Request, worker: Worker) -> Request:
         self._prefill_base += len(req.tokens)
         if req.home_replica == worker.wid:
             self._accidental_local += 1
         req.home_replica = worker.wid          # first touch / migration
-        return self.replicas[worker.wid].run(req)
+        return req
+
+    def _run_grab(self, tasks: list[Task], worker: Worker) -> list[Request]:
+        reqs = [self._touch(task.payload, worker) for task in tasks]
+        return self.replicas[worker.wid].run_batch(reqs)
 
     # -- public API ----------------------------------------------------------
     def submit(self, req: Request) -> None:

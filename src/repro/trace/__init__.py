@@ -52,8 +52,9 @@ Usage::
 """
 from .feedback import MeasuredPenalty
 from .io import TraceReader, TraceWriter, dumps_lines, loads_lines
-from .record import TraceRecorder
-from .replay import ReplayResult, executor_from_meta, replay
+from .record import TraceRecorder, executor_meta
+from .replay import (ReplayComparison, ReplayResult, TaskTiming,
+                     compare_replays, executor_from_meta, replay, task_times)
 from .schema import SCHEMA_VERSION, SubmissionRecord, Trace, TraceSchemaError
 from .storms import (Window, depth_imbalance, detect_inline_bursts,
                      detect_steal_storms, render_timeline, windows)
@@ -63,8 +64,9 @@ from .workloads import (Arrival, Workload, bursty, diurnal, drive, hot_skew,
 __all__ = [
     "MeasuredPenalty",
     "TraceReader", "TraceWriter", "dumps_lines", "loads_lines",
-    "TraceRecorder",
-    "ReplayResult", "executor_from_meta", "replay",
+    "TraceRecorder", "executor_meta",
+    "ReplayComparison", "ReplayResult", "TaskTiming", "compare_replays",
+    "executor_from_meta", "replay", "task_times",
     "SCHEMA_VERSION", "SubmissionRecord", "Trace", "TraceSchemaError",
     "Window", "depth_imbalance", "detect_inline_bursts",
     "detect_steal_storms", "render_timeline", "windows",

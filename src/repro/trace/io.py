@@ -8,17 +8,32 @@ from requiring a header, and rejects unknown schema versions up front.
     TraceWriter("run.trace.jsonl").write(trace)
     trace = TraceReader("run.trace.jsonl").read()
 
+Segmented + streaming export (long-running servers): pass
+``segment_records=N`` and the writer treats ``path`` as a *directory* of
+rotating JSONL segments (``segment-00000.jsonl``, ``segment-00001.jsonl``,
+…), each at most N records.  Segments can be written in one shot
+(``write``) or incrementally — ``begin(meta)`` opens the stream and emits
+the header, ``add_submission``/``add_event`` append (rotating as needed),
+``end(trace)`` emits the footer and closes — so a server exports as it
+runs instead of pausing for one big ``finish()`` dump.  ``TraceReader``
+reads a segment directory transparently: point it at the directory and it
+concatenates ``*.jsonl`` segments in name order.
+
 ``dumps_lines``/``loads_lines`` expose the same round-trip on in-memory line
 lists (no filesystem), which tests and the serving engine's trace hook use.
 """
 from __future__ import annotations
 
+import glob
 import json
 import os
-from typing import Iterable
+from typing import Any, Iterable, Iterator, Optional, TextIO
 
-from .schema import (Trace, event_dict, footer_dict, header_dict,
-                     parse_records, submission_dict)
+from ..runtime import Event
+from .schema import (SubmissionRecord, Trace, TraceSchemaError, event_dict,
+                     footer_dict, header_dict, parse_records, submission_dict)
+
+SEGMENT_PATTERN = "segment-*.jsonl"
 
 
 def dumps_lines(trace: Trace) -> list[str]:
@@ -37,27 +52,110 @@ def loads_lines(lines: Iterable[str]) -> Trace:
 
 
 class TraceWriter:
-    """Write a ``Trace`` to a JSONL file (parent dirs created)."""
+    """Write a ``Trace`` to a JSONL file, or to rotating JSONL segments.
 
-    def __init__(self, path: str | os.PathLike):
+    ``segment_records=None`` (default): ``path`` is a single file, written
+    whole by ``write``.  ``segment_records=N``: ``path`` is a directory of
+    rotating segments of at most N records each, usable either via
+    ``write`` or via the streaming ``begin``/``add_*``/``end`` protocol.
+    """
+
+    def __init__(self, path: str | os.PathLike,
+                 segment_records: Optional[int] = None):
+        if segment_records is not None and segment_records < 1:
+            raise ValueError("segment_records must be >= 1")
         self.path = os.fspath(path)
+        self.segment_records = segment_records
+        self._fh: Optional[TextIO] = None
+        self._seg = 0          # next segment index
+        self._in_seg = 0       # records in the open segment
+        self.records_written = 0
 
+    # -- one-shot ------------------------------------------------------------
     def write(self, trace: Trace) -> str:
-        parent = os.path.dirname(self.path)
-        if parent:
-            os.makedirs(parent, exist_ok=True)
-        with open(self.path, "w", encoding="utf-8") as fh:
-            for ln in dumps_lines(trace):
-                fh.write(ln + "\n")
+        """Write ``trace`` whole; returns the file (or directory) path."""
+        if self.segment_records is None:
+            parent = os.path.dirname(self.path)
+            if parent:
+                os.makedirs(parent, exist_ok=True)
+            with open(self.path, "w", encoding="utf-8") as fh:
+                for ln in dumps_lines(trace):
+                    fh.write(ln + "\n")
+            return self.path
+        self.begin(trace.meta)
+        for s in trace.submissions:
+            self.add_submission(s)
+        for e in trace.events:
+            self.add_event(e)
+        self.end(trace)
         return self.path
+
+    # -- streaming -----------------------------------------------------------
+    def begin(self, meta: dict[str, Any]) -> "TraceWriter":
+        """Open the stream and write the header record (segmented mode)."""
+        if self.segment_records is None:
+            raise RuntimeError("streaming export needs segment_records=N "
+                               "(single-file mode is one-shot write() only)")
+        if self._fh is not None or self._seg:
+            raise RuntimeError("TraceWriter stream already begun; "
+                               "use one writer per run")
+        os.makedirs(self.path, exist_ok=True)
+        self._append(header_dict(meta))
+        return self
+
+    def add_submission(self, s: SubmissionRecord) -> None:
+        self._append(submission_dict(s))
+
+    def add_event(self, e: Event) -> None:
+        self._append(event_dict(e))
+
+    def end(self, trace: Trace) -> str:
+        """Write the footer (taken from ``trace``) and close the stream."""
+        self._append(footer_dict(trace))
+        self._fh.close()
+        self._fh = None
+        return self.path
+
+    def _append(self, record: dict[str, Any]) -> None:
+        if self._fh is None or self._in_seg >= self.segment_records:
+            if self._fh is not None:
+                self._fh.close()
+            name = os.path.join(self.path, f"segment-{self._seg:05d}.jsonl")
+            self._fh = open(name, "w", encoding="utf-8")
+            self._seg += 1
+            self._in_seg = 0
+        self._fh.write(json.dumps(record) + "\n")
+        self._fh.flush()       # stream contract: records are on disk live
+        self._in_seg += 1
+        self.records_written += 1
 
 
 class TraceReader:
-    """Read a JSONL trace file back into a ``Trace``."""
+    """Read a JSONL trace back in — a single file or a segment directory.
+
+    A directory path is read as rotating segments: every
+    ``segment-*.jsonl`` inside is concatenated in name order (the writer's
+    zero-padded segment names sort chronologically), so segmented and
+    single-file traces are interchangeable to callers.
+    """
 
     def __init__(self, path: str | os.PathLike):
         self.path = os.fspath(path)
 
+    def _lines(self) -> Iterator[str]:
+        if os.path.isdir(self.path):
+            segments = sorted(glob.glob(os.path.join(self.path,
+                                                     SEGMENT_PATTERN)))
+            if not segments:
+                raise TraceSchemaError(
+                    f"no {SEGMENT_PATTERN} segments in directory "
+                    f"{self.path!r}")
+            for seg in segments:
+                with open(seg, "r", encoding="utf-8") as fh:
+                    yield from fh
+        else:
+            with open(self.path, "r", encoding="utf-8") as fh:
+                yield from fh
+
     def read(self) -> Trace:
-        with open(self.path, "r", encoding="utf-8") as fh:
-            return loads_lines(fh)
+        return loads_lines(self._lines())

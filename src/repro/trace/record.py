@@ -14,20 +14,44 @@ Usage::
     ... drive ex (submit/step/run_until_drained) ...
     trace = rec.finish()
     TraceWriter(path).write(trace)           # repro.trace.io
+
+Long-running servers can stream instead of snapshotting: pass a segmented
+``TraceWriter`` (``segment_records=N``) as ``stream`` and the recorder
+writes the header at ``attach`` time and every submission as it happens;
+``finish()`` then only appends the retained events and the footer — no
+whole-trace export pause.  When controllers rewire the executor
+(``repro.control.ControlLoop`` swaps the governor), attach them *before*
+the recorder so the streamed header names the effective governor.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, TYPE_CHECKING
 
 from ..runtime import Executor, Task
 from .schema import SubmissionRecord, Trace
+
+if TYPE_CHECKING:                                # no import cycle at runtime
+    from .io import TraceWriter
+
+
+def executor_meta(ex: Executor) -> dict:
+    """The executor construction parameters a trace header records."""
+    return {
+        "num_domains": ex.num_domains,
+        "worker_domains": [w.domain for w in ex.pool],
+        "steal_order": ex.queues.steal_order,
+        "pool_cap": ex.pool_cap,
+        "seed": ex.seed,
+        "governor": type(ex.governor).__name__,
+    }
 
 
 class TraceRecorder:
     """Capture an executor run as a replayable submission + event trace."""
 
-    def __init__(self) -> None:
+    def __init__(self, stream: Optional["TraceWriter"] = None) -> None:
         self.submissions: list[SubmissionRecord] = []
+        self.stream = stream
         self._ex: Optional[Executor] = None
 
     def attach(self, executor: Executor) -> Executor:
@@ -40,12 +64,16 @@ class TraceRecorder:
                                "use one recorder per run")
         executor.submit_hook = self._on_submit
         self._ex = executor
+        if self.stream is not None:
+            self.stream.begin(executor_meta(executor))
         return executor
 
     def _on_submit(self, task: Task, domain: int, step: int) -> None:
-        self.submissions.append(SubmissionRecord(
-            uid=task.uid, step=step, home=task.home,
-            cost=float(task.cost), domain=domain))
+        rec = SubmissionRecord(uid=task.uid, step=step, home=task.home,
+                               cost=float(task.cost), domain=domain)
+        self.submissions.append(rec)
+        if self.stream is not None:
+            self.stream.add_submission(rec)
 
     @property
     def executor(self) -> Executor:
@@ -57,20 +85,21 @@ class TraceRecorder:
         """Snapshot the attached executor's end-of-run state as a ``Trace``.
 
         Call after the drive loop (typically after ``run_until_drained``);
-        calling mid-run simply yields a trace of the run so far.
+        calling mid-run simply yields a trace of the run so far.  With a
+        ``stream`` writer attached, also appends the retained events and
+        the footer to the stream and closes it.
         """
         ex = self.executor
-        meta = {
-            "num_domains": ex.num_domains,
-            "worker_domains": [w.domain for w in ex.pool],
-            "steal_order": ex.queues.steal_order,
-            "pool_cap": ex.pool_cap,
-            "seed": ex.seed,
-            "governor": type(ex.governor).__name__,
-        }
         events = list(ex.events) if ex.events is not None else []
         counts = ex.events.counts() if ex.events is not None else {}
-        return Trace(meta=meta, submissions=list(self.submissions),
-                     events=events, total_steps=ex.step_count,
-                     stats=ex.metrics.snapshot(), event_counts=counts,
-                     events_retained=len(events))
+        trace = Trace(meta=executor_meta(ex),
+                      submissions=list(self.submissions),
+                      events=events, total_steps=ex.step_count,
+                      stats=ex.metrics.snapshot(), event_counts=counts,
+                      events_retained=len(events))
+        if self.stream is not None:
+            for e in events:
+                self.stream.add_event(e)
+            self.stream.end(trace)
+            self.stream = None
+        return trace

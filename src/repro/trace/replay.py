@@ -22,14 +22,25 @@ same arrival sequence, different policy ⇒ an honest A/B of steal policies
 default factory + the recorded governor semantics and the same penalty
 function), the replayed ``RuntimeStats`` reproduce the recorded ones
 bit-for-bit — asserted by ``ReplayResult.matches_recorded``.
+
+Two counterfactual extensions:
+
+  * ``reroute=True`` keeps the arrival sequence but lets the replay
+    executor re-decide the submit domains — the A/B for *routing* policies
+    (the recorded-domain default is the A/B for *steal* policies).
+  * ``ReplayResult.task_times`` + ``compare_replays`` report per-task
+    wait/sojourn and their per-uid deltas between two replays of the same
+    trace, so a governor change is judged by which tasks it helped and
+    hurt, not only by aggregate stats.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Iterable, Optional
 
-from ..runtime import (AdaptiveSteal, Executor, GreedySteal, NoSteal,
+from ..runtime import (AdaptiveSteal, Event, Executor, GreedySteal, NoSteal,
                        StealGovernor, Task)
+from .feedback import MeasuredPenalty
 from .schema import Trace
 
 GOVERNORS: dict[str, Callable[[], StealGovernor]] = {
@@ -37,6 +48,7 @@ GOVERNORS: dict[str, Callable[[], StealGovernor]] = {
     "NoSteal": NoSteal,
     "AdaptiveSteal": AdaptiveSteal,
     "StealGovernor": StealGovernor,
+    "MeasuredPenalty": MeasuredPenalty,
 }
 
 # stats keys that must agree for a replay to count as exact; results of
@@ -54,12 +66,22 @@ def executor_from_meta(trace: Trace, *,
 
     ``governor=None`` reconstructs the recorded governor *class* (default
     construction — governor hyper-parameters are not serialized; pass an
-    instance to override).  ``steal_penalty``/``handler``/``steal_order``
-    override the respective knobs for policy A/B replays.
+    instance to override).  A recorded governor name this module cannot
+    reconstruct (e.g. ``StormBreaker``, which needs its control loop)
+    raises instead of silently substituting the default — pass an explicit
+    ``governor`` (or a full factory that rebuilds the control plane, as
+    ``benchmarks.control_plane`` does).  ``steal_penalty``/``handler``/
+    ``steal_order`` override the respective knobs for policy A/B replays.
     """
     meta = trace.meta
     if governor is None:
-        factory = GOVERNORS.get(str(meta.get("governor")))
+        name = meta.get("governor")
+        if name is not None and name not in GOVERNORS:
+            raise ValueError(
+                f"trace was recorded under governor {name!r}, which "
+                "executor_from_meta cannot reconstruct; pass governor= "
+                "explicitly (or a factory that rebuilds it)")
+        factory = GOVERNORS.get(str(name))
         governor = factory() if factory is not None else None
     return Executor(
         int(meta["num_domains"]),
@@ -71,6 +93,48 @@ def executor_from_meta(trace: Trace, *,
         steal_penalty=steal_penalty,
         seed=int(meta.get("seed", 0)),
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskTiming:
+    """Per-task timing of one replayed (or recorded) execution.
+
+    ``wait`` is queueing delay in scheduling rounds (execute step − submit
+    step); ``service`` is the executed cost plus any nonlocal penalty paid
+    (cost units ≈ rounds at the repo's unit task cost); ``sojourn`` is
+    their sum — the discrete analogue of a request's end-to-end latency.
+    """
+
+    uid: int
+    submit_step: int
+    exec_step: int
+    service: float
+
+    @property
+    def wait(self) -> int:
+        return self.exec_step - self.submit_step
+
+    @property
+    def sojourn(self) -> float:
+        return self.wait + self.service
+
+
+def task_times(submissions, events: Iterable[Event]) -> dict[int, TaskTiming]:
+    """Fold submissions + execution events into per-task timings.
+
+    Works on a recorded ``Trace`` (``task_times(t.submissions, t.events)``)
+    or on a replay executor's live log.  Only tasks whose execution event is
+    still in the (ring-buffered) event window appear; for small runs that is
+    all of them.
+    """
+    submit_step = {s.uid: s.step for s in submissions}
+    out: dict[int, TaskTiming] = {}
+    for e in events:
+        if e.kind in ("run", "steal", "inline") and e.task_uid in submit_step:
+            out[e.task_uid] = TaskTiming(
+                uid=e.task_uid, submit_step=submit_step[e.task_uid],
+                exec_step=e.step, service=e.service)
+    return out
 
 
 @dataclasses.dataclass
@@ -94,10 +158,63 @@ class ReplayResult:
         return {k: (rec.get(k), got.get(k)) for k in FIDELITY_KEYS
                 if got.get(k) != rec.get(k)}
 
+    def task_times(self) -> dict[int, TaskTiming]:
+        """Per-task wait/sojourn of this replay (uid -> ``TaskTiming``),
+        from the replay executor's event log — the counterfactual-metrics
+        raw material (``compare_replays``)."""
+        if self.executor.events is None:
+            raise RuntimeError("replay executor recorded no events "
+                               "(record_events=False)")
+        return task_times(self.trace.submissions, self.executor.events)
+
+
+@dataclasses.dataclass
+class ReplayComparison:
+    """Per-task deltas between two replays of the same trace (B − A)."""
+
+    wait_delta: dict[int, int]        # uid -> wait_b - wait_a (rounds)
+    sojourn_delta: dict[int, float]   # uid -> sojourn_b - sojourn_a
+    mean_wait: tuple[float, float]    # (A, B)
+    mean_sojourn: tuple[float, float]
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.wait_delta)
+
+    @property
+    def improved(self) -> int:
+        """Tasks whose sojourn strictly improved under B."""
+        return sum(1 for d in self.sojourn_delta.values() if d < 0)
+
+    @property
+    def regressed(self) -> int:
+        return sum(1 for d in self.sojourn_delta.values() if d > 0)
+
+
+def compare_replays(a: ReplayResult, b: ReplayResult) -> ReplayComparison:
+    """Per-task counterfactual: what did policy B do to each task that
+    policy A also served?  Both replays must come from the *same* trace
+    (same submission uids/steps); tasks present in both event windows are
+    compared, per uid, not just in aggregate.
+    """
+    ta, tb = a.task_times(), b.task_times()
+    shared = sorted(set(ta) & set(tb))
+    if not shared:
+        raise ValueError("replays share no retained tasks to compare")
+    wait = {u: tb[u].wait - ta[u].wait for u in shared}
+    sojourn = {u: tb[u].sojourn - ta[u].sojourn for u in shared}
+    return ReplayComparison(
+        wait_delta=wait, sojourn_delta=sojourn,
+        mean_wait=(sum(ta[u].wait for u in shared) / len(shared),
+                   sum(tb[u].wait for u in shared) / len(shared)),
+        mean_sojourn=(sum(ta[u].sojourn for u in shared) / len(shared),
+                      sum(tb[u].sojourn for u in shared) / len(shared)))
+
 
 def replay(trace: Trace,
            executor_factory: Optional[Callable[[Trace], Executor]] = None,
-           *, assert_match: bool = False) -> ReplayResult:
+           *, assert_match: bool = False,
+           reroute: bool = False) -> ReplayResult:
     """Re-drive an executor through the trace's recorded arrival sequence.
 
     ``executor_factory(trace) -> Executor`` supplies the executor (default:
@@ -106,7 +223,17 @@ def replay(trace: Trace,
     ``assert_match=True`` the replayed stats are checked bit-for-bit
     against the recorded footer stats (use only with a policy-equivalent
     factory, including the recorded run's penalty function).
+
+    ``reroute=True`` replays the *arrivals* (uid/home/cost/step) but lets
+    the replay executor re-decide each submit domain (router/home/
+    round-robin) instead of forcing the recorded queue — the counterfactual
+    for submit-side policies (``repro.control.CostRouter`` A/Bs), just as a
+    plain replay is the counterfactual for dequeue-side steal policies.
+    Incompatible with ``assert_match`` (routing is the treatment).
     """
+    if reroute and assert_match:
+        raise ValueError("reroute re-decides routing; recorded stats are "
+                         "not expected to match")
     ex = (executor_factory or executor_from_meta)(trace)
     if ex.step_count != 0:
         raise ValueError("replay needs a fresh executor (step clock at 0)")
@@ -114,7 +241,8 @@ def replay(trace: Trace,
         while ex.step_count < rec.step:
             ex.step()
         ex.submit(Task(uid=rec.uid, payload=None, home=rec.home,
-                       cost=rec.cost), domain=rec.domain)
+                       cost=rec.cost),
+                  domain=None if reroute else rec.domain)
     # replicate any trailing rounds (including idle polls on empty queues —
     # they are part of the recorded stats), then drain whatever is left.
     while ex.step_count < trace.total_steps:

@@ -1,0 +1,479 @@
+"""repro.control: batch grabs, storm breaker, cost router, controlled replay."""
+import numpy as np
+import pytest
+
+from repro import trace
+from repro.control import (BatchGovernor, ControlLoop, CostRouter,
+                           StormBreaker)
+from repro.runtime import (AdaptiveSteal, DomainQueues, Executor, GreedySteal,
+                           Task, Worker)
+
+
+def _penalty(task, worker) -> float:
+    return 4.0 * task.cost
+
+
+def _skewed_workload(steps=32, seed=0, num_domains=4):
+    return trace.lognormal_costs(
+        trace.hot_skew(trace.poisson(rate=num_domains, steps=steps,
+                                     num_domains=num_domains, seed=seed),
+                       hot_domain=0, p_hot=0.8, seed=seed),
+        median=2.0, sigma=0.75, seed=seed)
+
+
+class TestBatchGrabs:
+    def test_batch_preserves_per_task_results(self):
+        def run(batch):
+            ex = Executor(2, batch=batch,
+                          handler=lambda t, w: (t.payload, t.uid))
+            for i in range(24):
+                ex.submit(ex.make_task(payload=i * 10, home=i % 2))
+            out = ex.run_until_drained()
+            return out, ex.stats, ex.step_count
+
+        out1, s1, steps1 = run(1)
+        out4, s4, steps4 = run(4)
+        assert sorted(out1) == sorted(out4) == [(i * 10, i) for i in range(24)]
+        assert s1.executed == s4.executed == 24
+        assert steps4 < steps1              # batching amortizes rounds
+
+    def test_batch_drains_only_source_queue(self):
+        # domain 1's worker steals a batch: every task in the grab must come
+        # from the victim queue (stolen), never mixed with its own
+        ex = Executor(2, batch=4, steal_penalty=lambda t, w: 1.0)
+        for i in range(6):
+            ex.submit(ex.make_task(payload=i, home=0))
+        ex.step()
+        kinds = [(e.kind, e.worker, e.src_domain) for e in ex.events
+                 if e.kind in ("run", "steal")]
+        assert ("steal", 1, 0) in kinds      # worker 0 grabs 4, worker 1
+        assert all(src == 0 for _, _, src in kinds)   # steals the rest
+        assert ex.stats.executed == 6        # one round served everything
+
+    def test_budgeted_drain_bounds_grab_cost(self):
+        q = DomainQueues(1)
+        for uid, c in enumerate((3.0, 3.0, 3.0, 1.0)):
+            q.enqueue(Task(uid=uid, cost=c), 0)
+        first = q.dequeue(0).item
+        got = q.drain(0, 8, budget=7.0, spent=first.cost)
+        assert [t.uid for t in got] == [1]   # 3+3 fits, a third 3 would not
+        assert len(q) == 2
+
+    def test_batch_budget_respected_end_to_end(self):
+        gov = BatchGovernor(target_service=4.0, batch_cap=8, init_size=8)
+        ex = Executor(1, batch=gov)
+        for i in range(8):
+            ex.submit(ex.make_task(payload=i, home=0, cost=2.0))
+        ex.step()
+        assert ex.stats.executed == 2        # 2 x cost 2.0 fills budget 4
+
+    def test_batch_handler_called_with_grabs(self):
+        grabs = []
+
+        def bh(tasks, worker):
+            grabs.append([t.uid for t in tasks])
+            return [t.payload for t in tasks]
+
+        ex = Executor(2, batch=3, batch_handler=bh)
+        for i in range(9):
+            ex.submit(ex.make_task(payload=i, home=i % 2))
+        out = ex.run_until_drained()
+        assert sorted(out) == list(range(9))
+        assert max(len(g) for g in grabs) > 1
+        assert sorted(u for g in grabs for u in g) == list(range(9))
+
+    def test_batch_handler_result_alignment_enforced(self):
+        ex = Executor(1, batch=2, batch_handler=lambda ts, w: [None])
+        ex.submit(ex.make_task(home=0))
+        ex.submit(ex.make_task(home=0))
+        with pytest.raises(ValueError, match="batch_handler"):
+            ex.step()
+
+    def test_events_and_stats_count_each_batched_task(self):
+        ex = Executor(2, batch=4, steal_penalty=lambda t, w: 2.0)
+        for i in range(12):
+            ex.submit(ex.make_task(payload=i, home=0))
+        ex.run_until_drained()
+        s = ex.stats
+        assert s.executed == 12
+        assert s.local + s.stolen == 12
+        counts = ex.events.counts()
+        assert counts.get("run", 0) + counts.get("steal", 0) == 12
+        assert s.steal_penalty == pytest.approx(2.0 * s.stolen)
+
+
+class TestBatchGovernor:
+    def test_adapts_size_to_service_budget(self):
+        gov = BatchGovernor(target_service=8.0, batch_cap=8, ema=1.0)
+        assert gov.size == 1
+        gov.on_batch(1, 1.0)                 # cheap tasks -> big batches
+        assert gov.size == 8
+        gov.on_batch(8, 64.0)                # 8 cost units/task -> batch of 1
+        assert gov.size == 1
+        gov.on_batch(1, 4.0)
+        assert gov.size == 2
+
+    def test_penalties_shrink_batches(self):
+        cheap = BatchGovernor(target_service=8.0, ema=1.0)
+        stormy = BatchGovernor(target_service=8.0, ema=1.0)
+        cheap.on_batch(4, 4.0)               # pure local cost
+        stormy.on_batch(4, 20.0)             # same tasks + steal penalties
+        assert stormy.size < cheap.size
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            BatchGovernor(target_service=0.0)
+        with pytest.raises(ValueError):
+            BatchGovernor(batch_min=4, batch_cap=2)
+
+    def test_executor_feeds_governor(self):
+        gov = BatchGovernor(target_service=4.0, batch_cap=4)
+        ex = Executor(2, batch=gov)
+        for i in range(16):
+            ex.submit(ex.make_task(payload=i, home=i % 2, cost=1.0))
+        ex.run_until_drained()
+        assert gov.batches > 0 and gov.tasks == 16
+        assert gov.size == 4                 # unit costs fill a budget of 4
+
+
+class TestStormBreaker:
+    def test_trips_on_steal_storm_and_cools_down(self):
+        br = StormBreaker(GreedySteal(), width=4, cooldown=2, mode="block")
+        assert not br.tripped
+        br.observe_window(executed=8, stolen=6, inline=0)    # storm
+        assert br.tripped and br.trips == 1
+        assert br.min_victim_depth(Worker(0, 0)) is None     # stealing cut
+        br.observe_window(executed=8, stolen=0, inline=0)    # quiet
+        assert br.tripped                                    # still cooling
+        br.observe_window(executed=8, stolen=0, inline=0)
+        assert not br.tripped                                # cooled down
+        assert br.min_victim_depth(Worker(0, 0)) == 1
+        assert br.trips == 1
+
+    def test_restorm_during_cooldown_rearms_once(self):
+        br = StormBreaker(GreedySteal(), width=4, cooldown=3)
+        br.observe_window(8, 6, 0)
+        br.observe_window(8, 6, 0)           # still storming: re-arm
+        assert br.trips == 1                 # one episode, not two
+
+    def test_inline_burst_trips(self):
+        br = StormBreaker(GreedySteal(), width=4, cooldown=1)
+        br.observe_window(executed=8, stolen=0, inline=4)
+        assert br.tripped
+
+    def test_raise_mode_boosts_inner_threshold(self):
+        inner = AdaptiveSteal(penalty_hint=2.0)
+        br = StormBreaker(inner, mode="raise", boost=8)
+        w = Worker(0, 0)
+        base = br.min_victim_depth(w)
+        br.observe_window(8, 6, 0)
+        assert br.min_victim_depth(w) == base + 8
+
+    def test_tiny_windows_never_trip(self):
+        br = StormBreaker(GreedySteal(), min_executed=4)
+        br.observe_window(executed=2, stolen=2, inline=0)
+        assert not br.tripped
+
+    def test_live_breaker_trips_under_hot_skew(self):
+        loop = ControlLoop(breaker=StormBreaker(width=4, cooldown=2,
+                                                mode="block"))
+        ex = loop.attach(Executor(4, steal_penalty=_penalty))
+        trace.drive(ex, _skewed_workload())
+        assert loop.breaker.trips >= 1
+        assert not loop.breaker.tripped      # drained queues = quiet windows
+
+    def test_breaker_reduces_storm_windows(self):
+        wl = _skewed_workload()
+
+        def run(control):
+            ex = Executor(4, steal_penalty=_penalty)
+            if control:
+                ControlLoop(breaker=StormBreaker(width=4, cooldown=2,
+                                                 mode="block")).attach(ex)
+            trace.drive(ex, wl)
+            return ex
+
+        plain, broken = run(False), run(True)
+        storms = lambda ex: len(  # noqa: E731
+            trace.detect_steal_storms(ex.events, width=4))
+        assert broken.stats.executed == plain.stats.executed == wl.n_tasks
+        assert storms(broken) < storms(plain)
+        assert broken.stats.steal_penalty < plain.stats.steal_penalty
+
+
+class TestCostWeightedStealOrder:
+    def test_victim_is_most_queued_cost_not_depth(self):
+        q = DomainQueues(3, steal_order="cost_weighted")
+        q.enqueue(Task(uid=0, cost=1.0), 1)
+        q.enqueue(Task(uid=1, cost=1.0), 1)      # domain 1: depth 2, cost 2
+        q.enqueue(Task(uid=2, cost=9.0), 2)      # domain 2: depth 1, cost 9
+        got = q.dequeue(0)
+        assert got.domain == 2 and got.stolen
+        assert q.cost(2) == 0.0
+        assert q.queue_costs() == [0.0, 2.0, 0.0]
+
+    def test_cost_tracking_through_drain(self):
+        q = DomainQueues(2, steal_order="cost_weighted")
+        for uid, c in enumerate((2.0, 3.0, 5.0)):
+            q.enqueue(Task(uid=uid, cost=c), 0)
+        assert q.cost(0) == pytest.approx(10.0)
+        q.dequeue(0)
+        assert q.cost(0) == pytest.approx(8.0)
+        assert [t.cost for t in q.drain(0, 5)] == [3.0, 5.0]
+        assert q.cost(0) == 0.0 and len(q) == 0
+
+
+class TestCostRouter:
+    def test_routes_to_least_backlog(self):
+        ex = Executor(3)
+        router = CostRouter(spill_penalty=None).bind(ex)
+        ex.queues.enqueue(Task(uid=0, cost=5.0), 0)
+        ex.queues.enqueue(Task(uid=1, cost=1.0), 1)
+        assert router.route(Task(uid=2, cost=1.0)) == 2      # empty wins
+        assert router.backlog_time(0) == 5.0
+
+    def test_home_sticky_until_spill_penalty(self):
+        ex = Executor(2)
+        router = CostRouter(spill_penalty=4.0).bind(ex)
+        ex.queues.enqueue(Task(uid=0, cost=3.0), 0)
+        assert router.route(Task(uid=1, home=0)) == 0        # gap 3 <= 4
+        ex.queues.enqueue(Task(uid=2, cost=3.0), 0)
+        assert router.route(Task(uid=3, home=0)) == 1        # gap 6 > 4
+        assert router.spilled == 1
+
+    def test_never_routes_to_unserved_domain(self):
+        # domain 2 has no pinned worker: the router must not feed it
+        ex = Executor(3, worker_domains=[0, 1])
+        router = CostRouter(spill_penalty=0.0).bind(ex)
+        for _ in range(8):
+            d = router.route(Task(uid=0, cost=1.0))
+            assert d in (0, 1)
+            ex.queues.enqueue(Task(uid=0, cost=1.0), d)
+
+    def test_beats_round_robin_backlog_on_lognormal_costs(self):
+        # acceptance: on a hot-skewed heavy-tailed stream under budgeted
+        # continuous batching, cost routing beats both round-robin and home
+        # routing on mean end-to-end backlog time — wait plus service with
+        # the serving engine's accounting (a task executed off its home
+        # domain re-prefills, i.e. pays the nonlocal penalty).  Round-robin
+        # balances items but scatters 3/4 of tasks off-home; home routing
+        # keeps locality but force-feeds the hot queue; the router pays the
+        # penalty only when the queueing-delay gap is worth it.
+        miss_factor = 4.0
+        wl = trace.lognormal_costs(
+            trace.hot_skew(trace.poisson(rate=8, steps=48, num_domains=4,
+                                         seed=0), hot_domain=0, p_hot=0.8,
+                           seed=0),
+            median=2.0, sigma=1.0, seed=0)
+
+        def backlog_time(mode):
+            ex = Executor(4, steal_penalty=lambda t, w: miss_factor * t.cost,
+                          batch=BatchGovernor(target_service=8.0,
+                                              batch_cap=8))
+            if mode == "router":
+                ex.router = CostRouter(spill_penalty=8.0).bind(ex).route
+            homes = {}
+            by_step = wl.by_step()
+            for t in range(wl.horizon):
+                for a in by_step.get(t, ()):
+                    task = ex.make_task(home=a.home, cost=a.cost)
+                    homes[task.uid] = a.home
+                    ex.submit(task, domain=ex.next_round_robin()
+                              if mode == "rr" else None)
+                ex.step()
+            ex.run_until_drained()
+            assert ex.stats.executed == wl.n_tasks
+            subs = {e.task_uid: e.step for e in ex.events
+                    if e.kind == "submit"}
+            soj, misses = [], 0
+            for e in ex.events:
+                if e.kind in ("run", "steal", "inline"):
+                    miss = homes[e.task_uid] >= 0 \
+                        and e.domain != homes[e.task_uid]
+                    misses += miss
+                    soj.append((e.step - subs[e.task_uid]) + e.cost
+                               + (miss_factor * e.cost if miss else 0.0))
+            return float(np.mean(soj)), misses
+
+        router, router_miss = backlog_time("router")
+        rr, rr_miss = backlog_time("rr")
+        home, _ = backlog_time("home")
+        assert router < rr < home
+        assert router_miss < rr_miss    # fewer re-prefills than round-robin
+
+
+class TestRoundRobinHotSkip:
+    def test_skips_domain_over_twice_mean_depth(self):
+        ex = Executor(4)
+        for _ in range(12):
+            ex.submit(ex.make_task(home=0))          # depths (12, 0, 0, 0)
+        routed = []
+        ex.submit_hook = lambda task, domain, step: routed.append(domain)
+        for _ in range(6):
+            ex.submit(ex.make_task())                # homeless -> round-robin
+        assert 0 not in routed                       # hot domain skipped
+        assert routed == [1, 2, 3, 1, 2, 3]
+
+    def test_balanced_queues_keep_plain_cycle(self):
+        ex = Executor(3)
+        routed = []
+        ex.submit_hook = lambda task, domain, step: routed.append(domain)
+        for _ in range(6):
+            ex.submit(ex.make_task())
+        assert routed == [0, 1, 2, 0, 1, 2]
+
+    def test_hot_skew_workload_regression(self):
+        # 80% of arrivals homed hot on domain 0, the rest homeless: the
+        # homeless remainder must not be force-fed to the hot queue
+        wl = trace.hot_skew(trace.poisson(rate=4, steps=32, num_domains=4,
+                                          seed=7), hot_domain=0, p_hot=0.8,
+                            seed=7)
+        overfed = []
+
+        def hook(task, domain, step):
+            if task.home < 0:
+                sizes = ex.queues.queue_sizes()
+                sizes[domain] -= 1               # depth before this enqueue
+                cap = 2.0 * sum(sizes) / len(sizes)
+                overfed.append(sizes[domain] > cap)
+
+        ex = Executor(4, steal_penalty=_penalty, submit_hook=hook)
+        by_step = wl.by_step()
+        for t in range(wl.horizon):
+            for a in by_step.get(t, ()):
+                home = a.home if a.home == 0 else -1
+                ex.submit(ex.make_task(home=home, cost=a.cost))
+            ex.step()
+        ex.run_until_drained()
+        assert overfed and not any(overfed)
+        assert ex.stats.executed == wl.n_tasks
+
+
+class TestControlledReplay:
+    def _loop(self):
+        return ControlLoop.full(spill_penalty=4.0, width=4, cooldown=2)
+
+    def test_controlled_run_replays_bit_identical(self):
+        # acceptance: record a fully-controlled run, replay it with a fresh
+        # identically-configured control plane -> RuntimeStats bit-identical
+        rec = trace.TraceRecorder()
+        ex = self._loop().attach(Executor(4, steal_penalty=_penalty))
+        rec.attach(ex)
+        trace.drive(ex, _skewed_workload())
+        t = rec.finish()
+        assert t.meta["governor"] == "StormBreaker"
+        res = trace.replay(t, lambda tr: self._loop().attach(
+            trace.executor_from_meta(tr, governor=GreedySteal(),
+                                     steal_penalty=_penalty)),
+            assert_match=True)
+        assert res.matches_recorded
+
+    def test_controlled_beats_uncontrolled_on_replayed_trace(self):
+        # the benchmark's gate, in miniature: same recorded arrivals, the
+        # controlled arm pays less steal penalty with no lost work
+        rec = trace.TraceRecorder()
+        ex = rec.attach(Executor(4, steal_penalty=_penalty))
+        trace.drive(ex, _skewed_workload())
+        t = rec.finish()
+        un = trace.replay(t, lambda tr: trace.executor_from_meta(
+            tr, steal_penalty=_penalty), reroute=True)
+        co = trace.replay(t, lambda tr: self._loop().attach(
+            trace.executor_from_meta(tr, governor=GreedySteal(),
+                                     steal_order="cost_weighted",
+                                     steal_penalty=_penalty)), reroute=True)
+        assert co.stats["executed"] == un.stats["executed"] == t.n_tasks
+        assert co.stats["steal_penalty"] < un.stats["steal_penalty"]
+        delta = trace.compare_replays(un, co)
+        assert delta.mean_sojourn[1] <= delta.mean_sojourn[0]
+
+    def test_reroute_rejects_assert_match(self):
+        rec = trace.TraceRecorder()
+        ex = rec.attach(Executor(2))
+        ex.submit(ex.make_task(home=0))
+        ex.run_until_drained()
+        t = rec.finish()
+        with pytest.raises(ValueError):
+            trace.replay(t, reroute=True, assert_match=True)
+
+
+class TestControlLoopWiring:
+    def test_attach_splices_all_hooks(self):
+        loop = ControlLoop.full()
+        ex = loop.attach(Executor(4))
+        assert ex.router is not None
+        assert ex.batch is loop.batcher
+        assert isinstance(ex.governor, StormBreaker)
+        assert ex.step_hook is not None
+
+    def test_breaker_wraps_existing_governor(self):
+        inner = AdaptiveSteal(penalty_hint=3.0)
+        loop = ControlLoop(breaker=StormBreaker())
+        ex = loop.attach(Executor(2, governor=inner))
+        assert ex.governor.inner is inner
+
+    def test_single_attach(self):
+        loop = ControlLoop.full()
+        loop.attach(Executor(2))
+        with pytest.raises(RuntimeError):
+            loop.attach(Executor(2))
+
+
+class TestServingBatchIdentity:
+    @pytest.fixture(scope="class")
+    def small_model(self):
+        jax = pytest.importorskip("jax")
+        from repro.configs import get_config, reduce_config
+        from repro.models.model import build_model
+
+        cfg = reduce_config(get_config("qwen2-0.5b"))
+        model = build_model(cfg, max_pos=96)
+        params = model.init_params(jax.random.key(0))
+        return cfg, model, params
+
+    def _requests(self, cfg, n=8, replicas=2, seed=0):
+        from repro.serving.engine import Request
+
+        rng = np.random.default_rng(seed)
+        out = []
+        for i in range(n):
+            toks = rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(6, 14)))
+            home = int(rng.integers(0, replicas)) if rng.random() < 0.7 else -1
+            out.append(Request(uid=i, tokens=toks, max_new=3,
+                               home_replica=home))
+        return out
+
+    def test_batched_outputs_token_identical_all_policies(self, small_model):
+        # acceptance: batching enabled vs disabled, identical tokens under
+        # every routing policy
+        from repro.serving.engine import ServingEngine
+
+        cfg, model, params = small_model
+        for policy in ("locality", "round_robin", "single_queue"):
+            outs = {}
+            for batch in (1, 3):
+                eng = ServingEngine(model, params, num_replicas=2,
+                                    max_seq=64, policy=policy, batch=batch)
+                for r in self._requests(cfg):
+                    eng.submit(r)
+                done = eng.run_until_drained()
+                assert eng.stats.served == 8
+                outs[batch] = {r.uid: tuple(r.out_tokens) for r in done}
+            assert outs[1] == outs[3], policy
+
+    def test_controlled_engine_matches_uncontrolled_tokens(self, small_model):
+        from repro.serving.engine import ServingEngine
+
+        cfg, model, params = small_model
+
+        def serve(control):
+            eng = ServingEngine(model, params, num_replicas=2, max_seq=64,
+                                policy="locality", control=control)
+            for r in self._requests(cfg, seed=4):
+                eng.submit(r)
+            return {r.uid: tuple(r.out_tokens)
+                    for r in eng.run_until_drained()}
+
+        base = serve(None)
+        controlled = serve(ControlLoop.full(batch_cap=4))
+        assert controlled == base

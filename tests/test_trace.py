@@ -218,6 +218,112 @@ class TestStorms:
         assert trace.detect_steal_storms(t.events, width=4) != []
 
 
+class TestSegmentedTraces:
+    def test_one_shot_segmented_round_trip(self, tmp_path):
+        t, _ = _recorded_run()
+        d = tmp_path / "segments"
+        trace.TraceWriter(d, segment_records=20).write(t)
+        segs = sorted(d.glob("segment-*.jsonl"))
+        assert len(segs) > 1                      # actually rotated
+        assert all(sum(1 for _ in s.open()) <= 20 for s in segs)
+        t2 = trace.TraceReader(d).read()
+        assert t2.meta == t.meta
+        assert t2.submissions == t.submissions
+        assert t2.events == t.events
+        assert t2.stats == t.stats
+
+    def test_streaming_export_writes_submissions_live(self, tmp_path):
+        # the long-running-server path: submissions hit disk as they are
+        # recorded, finish() only appends events + footer
+        d = tmp_path / "stream"
+        w = trace.TraceWriter(d, segment_records=8)
+        rec = trace.TraceRecorder(stream=w)
+        ex = rec.attach(Executor(2, steal_penalty=_penalty))
+        for i in range(12):
+            ex.submit(ex.make_task(payload=i, home=i % 2))
+        mid = sum(1 for s in d.glob("*.jsonl") for _ in s.open())
+        assert mid >= 13                          # header + submissions live
+        ex.run_until_drained()
+        t = rec.finish()
+        t2 = trace.TraceReader(d).read()
+        assert t2.submissions == t.submissions
+        assert t2.stats == t.stats
+        assert t2.events == t.events
+        trace.replay(t2, lambda tr: trace.executor_from_meta(
+            tr, steal_penalty=_penalty), assert_match=True)
+
+    def test_segmented_replayable_same_as_single_file(self, tmp_path):
+        t, _ = _recorded_run()
+        trace.TraceWriter(tmp_path / "one.jsonl").write(t)
+        trace.TraceWriter(tmp_path / "many", segment_records=10).write(t)
+        one = trace.TraceReader(tmp_path / "one.jsonl").read()
+        many = trace.TraceReader(tmp_path / "many").read()
+        assert one.submissions == many.submissions
+        assert one.stats == many.stats
+
+    def test_streaming_needs_segments_and_single_begin(self, tmp_path):
+        with pytest.raises(RuntimeError):
+            trace.TraceWriter(tmp_path / "x.jsonl").begin({})
+        w = trace.TraceWriter(tmp_path / "d", segment_records=4)
+        w.begin({"num_domains": 2})
+        with pytest.raises(RuntimeError):
+            w.begin({"num_domains": 2})
+        with pytest.raises(ValueError):
+            trace.TraceWriter(tmp_path / "d2", segment_records=0)
+
+    def test_empty_segment_dir_rejected(self, tmp_path):
+        d = tmp_path / "empty"
+        d.mkdir()
+        with pytest.raises(trace.TraceSchemaError):
+            trace.TraceReader(d).read()
+
+
+class TestCounterfactualMetrics:
+    def test_task_times_cover_all_tasks(self):
+        t, _ = _recorded_run()
+        res = trace.replay(t, lambda tr: trace.executor_from_meta(
+            tr, steal_penalty=_penalty), assert_match=True)
+        times = res.task_times()
+        assert len(times) == t.n_tasks
+        subs = {s.uid: s.step for s in t.submissions}
+        for uid, tt in times.items():
+            assert tt.submit_step == subs[uid]
+            assert tt.wait >= 0
+            assert tt.sojourn == tt.wait + tt.service
+
+    def test_identical_replays_have_zero_deltas(self):
+        t, _ = _recorded_run()
+        factory = lambda tr: trace.executor_from_meta(  # noqa: E731
+            tr, steal_penalty=_penalty)
+        cmp = trace.compare_replays(trace.replay(t, factory),
+                                    trace.replay(t, factory))
+        assert cmp.n_tasks == t.n_tasks
+        assert set(cmp.wait_delta.values()) == {0}
+        assert cmp.improved == cmp.regressed == 0
+        assert cmp.mean_wait[0] == cmp.mean_wait[1]
+
+    def test_governor_ab_reports_per_task_deltas(self):
+        t, _ = _recorded_run()
+        greedy = trace.replay(t, lambda tr: trace.executor_from_meta(
+            tr, steal_penalty=_penalty))
+        throttled = trace.replay(t, lambda tr: trace.executor_from_meta(
+            tr, governor=AdaptiveSteal(penalty_hint=4.0),
+            steal_penalty=_penalty))
+        cmp = trace.compare_replays(greedy, throttled)
+        assert cmp.n_tasks == t.n_tasks
+        # the throttle must actually move individual tasks, both ways
+        assert cmp.improved > 0 and cmp.regressed > 0
+        # aggregate means are consistent with the per-task deltas
+        mean_delta = sum(cmp.sojourn_delta.values()) / cmp.n_tasks
+        assert mean_delta == pytest.approx(
+            cmp.mean_sojourn[1] - cmp.mean_sojourn[0])
+
+    def test_task_times_on_recorded_trace(self):
+        t, _ = _recorded_run()
+        times = trace.task_times(t.submissions, t.events)
+        assert times and all(v.wait >= 0 for v in times.values())
+
+
 class TestMeasuredPenalty:
     def test_theta_within_observed_service_range(self):
         # acceptance: MeasuredPenalty-fed AdaptiveSteal reaches a θ within
