@@ -2,7 +2,7 @@
 # works without an editable install.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test smoke bench trace control
+.PHONY: test smoke bench trace control spec
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -27,3 +27,9 @@ trace:
 control:
 	$(PY) examples/control_serving.py
 	$(PY) -m benchmarks.control_plane --fast
+
+# spec smoke: every checked-in policy file must parse, build, and replay
+# bit-identically from its own trace header, then the JSON-policy demo
+spec:
+	$(PY) -m repro.spec.validate specs
+	$(PY) examples/spec_policies.py

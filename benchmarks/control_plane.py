@@ -30,9 +30,19 @@ steal_penalty,storm_windows,mean_wait,mean_sojourn,improved,regressed
 
 ``main(json_path=...)`` (default ``BENCH_control.json`` as a script) also
 writes the machine-readable summary + controller state per scenario.
+
+Both arms are declarative ``repro.spec`` policies: the recorded baseline
+embeds its spec in the trace header (the determinism gate is a bare
+``replay(trace, assert_match=True)`` — the acceptance criterion that a v2
+trace alone reconstructs the recorded system), and the controlled arm is
+the registry policy ``controlled_replay``.  ``main(spec=...)`` substitutes
+any spec as the controlled arm (``benchmarks.run --spec/--policy``;
+``gates=False`` then skips the controlled-must-win assertions, since an
+arbitrary policy makes no such promise).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import sys
 
@@ -44,10 +54,6 @@ STORM_WIDTH = 8
 SCENARIOS = ("bursty", "diurnal", "hot_skew")
 
 
-def _steal_penalty(task, worker) -> float:
-    return STEAL_PENALTY
-
-
 def _scenarios(steps: int, seed: int):
     from repro.trace import lognormal_costs, standard_scenarios
 
@@ -57,30 +63,35 @@ def _scenarios(steps: int, seed: int):
             for i, name in enumerate(SCENARIOS)}
 
 
+def _base_spec(seed: int):
+    """The uncontrolled recording configuration: the shared registry
+    ``replay_baseline`` policy (also used by ``benchmarks.trace_replay``),
+    re-seeded."""
+    from repro import spec
+
+    base = dataclasses.replace(spec.named("replay_baseline"), seed=seed)
+    assert (base.num_domains == NUM_DOMAINS
+            and base.penalty.value == STEAL_PENALTY), \
+        "benchmark constants drifted from the replay_baseline registry policy"
+    return base
+
+
 def _record_baseline(workload, seed: int):
-    from repro.runtime import Executor
-    from repro.trace import TraceRecorder, drive
+    from repro.trace import drive
 
-    rec = TraceRecorder()
-    ex = rec.attach(Executor(NUM_DOMAINS, steal_order="cyclic",
-                             steal_penalty=_steal_penalty, seed=seed))
-    drive(ex, workload)
-    return rec.finish()
+    built = _base_spec(seed).build()
+    drive(built.executor, workload)
+    return built.recorder.finish()
 
 
-def _controlled_factory(trace):
-    """Fresh full control plane over the recorded executor parameters."""
-    from repro.control import ControlLoop
-    from repro.runtime import GreedySteal
-    from repro.trace import executor_from_meta
-
-    loop = ControlLoop.full(spill_penalty=STEAL_PENALTY,
-                            width=STORM_WIDTH)
-    ex = loop.attach(executor_from_meta(
-        trace, governor=GreedySteal(), steal_order="cost_weighted",
-        steal_penalty=_steal_penalty))
-    ex._control_loop = loop          # kept for the benchmark's snapshot
-    return ex
+def _controlled_factory(spec):
+    """Replay factory for the controlled arm: build ``spec`` fresh and keep
+    its control loop reachable for the benchmark's snapshot."""
+    def factory(trace):
+        built = spec.build()
+        built.executor._control_loop = built.control
+        return built.executor
+    return factory
 
 
 def _measure(result):
@@ -107,9 +118,14 @@ def _measure(result):
 
 
 def main(steps: int = 48, seed: int = 0,
-         json_path: str | None = None) -> list[str]:
-    from repro.trace import compare_replays, executor_from_meta, replay
+         json_path: str | None = None, spec=None,
+         gates: bool = True) -> list[str]:
+    from repro import spec as rspec
+    from repro.trace import compare_replays, replay
 
+    controlled = (spec if spec is not None
+                  else rspec.named("controlled_replay"))
+    controlled = dataclasses.replace(controlled, seed=seed)
     lines = ["scenario,arm,tasks,makespan,throughput,local_frac,steal_frac,"
              "steal_penalty,storm_windows,mean_wait,mean_sojourn,"
              "improved,regressed"]
@@ -118,19 +134,19 @@ def main(steps: int = 48, seed: int = 0,
     for scen, workload in _scenarios(steps, seed).items():
         trace = _record_baseline(workload, seed)
 
-        # determinism gate first: the recorded-config replay must reproduce
-        # the recorded stats bit-for-bit before any counterfactual is run.
-        replay(trace, lambda tr: executor_from_meta(
-            tr, steal_penalty=_steal_penalty), assert_match=True)
+        # determinism gate first — and the spec acceptance criterion: the
+        # v2 header alone (no executor argument, no factory) reconstructs
+        # the recorded system and reproduces its stats bit-for-bit.
+        replay(trace, assert_match=True)
 
-        un = replay(trace, lambda tr: executor_from_meta(
-            tr, steal_penalty=_steal_penalty), reroute=True)
-        co = replay(trace, _controlled_factory, reroute=True)
+        un = replay(trace, reroute=True)
+        co = replay(trace, _controlled_factory(controlled), reroute=True)
         delta = compare_replays(un, co)
 
         u, c = _measure(un), _measure(co)
-        assert c["throughput"] >= u["throughput"], (scen, u, c)
-        assert c["storm_windows"] <= u["storm_windows"], (scen, u, c)
+        if gates:
+            assert c["throughput"] >= u["throughput"], (scen, u, c)
+            assert c["storm_windows"] <= u["storm_windows"], (scen, u, c)
         storms_reduced += u["storm_windows"] - c["storm_windows"]
         assert u["tasks"] == c["tasks"] == trace.n_tasks
 
@@ -145,11 +161,15 @@ def main(steps: int = 48, seed: int = 0,
                 f"{imp},{reg}")
         results[scen] = {
             "uncontrolled": u, "controlled": c,
-            "controller": co.executor._control_loop.snapshot(),
+            # a --spec policy may declare no control plane at all
+            "controller": (co.executor._control_loop.snapshot()
+                           if co.executor._control_loop is not None else {}),
             "tasks_improved": delta.improved,
             "tasks_regressed": delta.regressed,
         }
-    assert storms_reduced > 0, "control plane never reduced a storm window"
+    if gates:
+        assert storms_reduced > 0, \
+            "control plane never reduced a storm window"
     if json_path:
         with open(json_path, "w", encoding="utf-8") as fh:
             json.dump({"bench": "control_plane", "steps": steps,

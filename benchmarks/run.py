@@ -1,10 +1,19 @@
 """Benchmark harness entry: one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run --spec path/to/policy.json
+    PYTHONPATH=src python -m benchmarks.run --policy controlled_replay
 
 Prints ``name,us_per_call,derived`` CSV summary lines plus each benchmark's
 own CSV block.  ``--full`` uses the paper's full 14400-task grid and 100
 samples (slow; the recorded numbers live in EXPERIMENTS.md).
+
+``--spec FILE`` / ``--policy NAME`` run the *runtime* benchmarks
+(runtime_throughput, trace_replay, control_plane) against one serialized
+``repro.spec`` policy — a JSON file or a registry name — instead of their
+built-in policy grids: any scheduling configuration can be benchmarked
+without a code edit.  The control-plane win gates are skipped in this mode
+(an arbitrary policy makes no controlled-must-win promise).
 """
 from __future__ import annotations
 
@@ -18,8 +27,48 @@ def _block(title: str, lines: list[str]) -> None:
         print(ln)
 
 
+def _cli_spec(argv: list[str]):
+    """The ``RuntimeSpec`` named by --spec FILE / --policy NAME, or None."""
+    from repro import spec as rspec
+
+    for flag, resolve in (("--spec", rspec.load), ("--policy", rspec.named)):
+        if flag in argv:
+            i = argv.index(flag)
+            if i + 1 >= len(argv):
+                raise SystemExit(f"{flag} needs an argument")
+            return resolve(argv[i + 1])
+    return None
+
+
+def run_with_spec(spec, full: bool = False) -> None:
+    """Drive the runtime benchmarks with ``spec`` as the policy under test."""
+    from benchmarks import control_plane, runtime_throughput, trace_replay
+
+    if spec.num_domains != runtime_throughput.NUM_DOMAINS:
+        raise SystemExit(
+            f"--spec/--policy: the runtime benchmarks drive fixed "
+            f"{runtime_throughput.NUM_DOMAINS}-domain workloads; the given "
+            f"spec declares num_domains={spec.num_domains} "
+            f"(serving-topology specs like 'controlled_serving' benchmark "
+            f"through examples/control_serving.py instead)")
+
+    lines = runtime_throughput.main(n_tasks=1600 if full else 160, spec=spec)
+    _block("Runtime throughput under --spec policy", lines)
+    lines = trace_replay.main(steps=96 if full else 24, spec=spec)
+    _block("Trace replay: recorded baseline vs --spec policy", lines)
+    lines = control_plane.main(steps=96 if full else 24, spec=spec,
+                               gates=False, json_path="BENCH_spec.json")
+    _block("Control plane: uncontrolled vs --spec policy (no win gates)",
+           lines)
+    print("\n# spec-mode run complete (BENCH_spec.json written)")
+
+
 def main() -> None:
     full = "--full" in sys.argv
+    spec = _cli_spec(sys.argv[1:])
+    if spec is not None:
+        run_with_spec(spec, full=full)
+        return
     from repro.core import PAPER_GRID, SMALL_GRID
     grid = PAPER_GRID if full else SMALL_GRID
     summary = []

@@ -32,9 +32,16 @@ when run as a script) writes a machine-readable ``scenario -> policy ->
 {throughput, local_fraction, steal_penalty, ...}`` summary so the perf
 trajectory is comparable across PRs (``throughput`` = tasks per scheduling
 round, the discrete makespan-normalized rate).
+
+Every policy is a named ``repro.spec.RuntimeSpec`` from the registry
+(static → ``static_local``, tasking → ``tasking_round_robin``, locality →
+``paper_cyclic``, adaptive → ``adaptive_theta``); ``main(spec=...)``
+replaces the whole grid with one externally supplied spec — the
+``benchmarks.run --spec/--policy`` path.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import sys
 
@@ -70,28 +77,23 @@ def _scenarios(n_tasks: int, seed: int):
 
 
 def _policies():
-    from repro.runtime import AdaptiveSteal, GreedySteal, NoSteal
+    from repro import spec
 
-    # name -> (route_by_home, governor factory)
+    # benchmark arm -> registry policy (all declarative; no constructors)
     return {
-        "static": (True, NoSteal),
-        "tasking": (False, GreedySteal),
-        "locality": (True, GreedySteal),
-        "adaptive": (True, lambda: AdaptiveSteal(penalty_hint=STEAL_PENALTY)),
+        "static": spec.named("static_local"),
+        "tasking": spec.named("tasking_round_robin"),
+        "locality": spec.named("paper_cyclic"),
+        "adaptive": spec.named("adaptive_theta"),
     }
 
 
-def _drive(waves, route_by_home: bool, governor, seed: int):
-    from repro.runtime import Executor
-
-    ex = Executor(NUM_DOMAINS, governor=governor, steal_order="cyclic",
-                  steal_penalty=lambda task, worker: STEAL_PENALTY,
-                  seed=seed, record_events=False)
+def _drive(waves, policy_spec, seed: int):
+    ex = dataclasses.replace(policy_spec, seed=seed,
+                             record_events=False).build().executor
     for batch in waves:
         for home in batch:
-            task = ex.make_task(home=int(home))
-            ex.submit(task, domain=None if route_by_home
-                      else ex.next_round_robin())
+            ex.submit(ex.make_task(home=int(home)))
         ex.step()
     ex.run_until_drained()
     return ex
@@ -115,12 +117,13 @@ def to_json(lines: list[str]) -> dict:
 
 
 def main(n_tasks: int = 400, seed: int = 0,
-         json_path: str | None = None) -> list[str]:
+         json_path: str | None = None, spec=None) -> list[str]:
+    policies = {"spec": spec} if spec is not None else _policies()
     lines = ["scenario,policy,tasks,local_frac,steal_frac,steal_penalty,"
              "idle_polls,steps"]
     for scen_name, waves in _scenarios(n_tasks, seed).items():
-        for pol_name, (route_by_home, gov_factory) in _policies().items():
-            ex = _drive(waves, route_by_home, gov_factory(), seed)
+        for pol_name, policy_spec in policies.items():
+            ex = _drive(waves, policy_spec, seed)
             s = ex.stats
             assert s.executed == n_tasks, (scen_name, pol_name, s.executed)
             lines.append(

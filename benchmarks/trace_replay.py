@@ -25,10 +25,18 @@ in unit-cost tasks (θ = penalty / 1), while ``MeasuredPenalty`` learns the
 real ~2.6 mean local cost and lands on a correspondingly lower θ — same
 penalty, different (correct) depth threshold.
 
+The recorded baseline and every replay arm are built from
+``repro.spec.RuntimeSpec`` values (the baseline spec rides in the trace
+header, so the determinism gate is a bare ``replay(trace,
+assert_match=True)`` — no hand-written factory).  ``main(spec=...)``
+replaces the governor grid with one externally supplied spec
+(``benchmarks.run --spec/--policy``).
+
 CSV: scenario,governor,tasks,local_frac,steal_frac,steal_penalty,idle_polls,steps,theta
 """
 from __future__ import annotations
 
+import dataclasses
 import sys
 
 NUM_DOMAINS = 4
@@ -37,30 +45,45 @@ COST_MEDIAN = 2.0        # lognormal service-cost median (sigma below)
 COST_SIGMA = 0.75
 
 
-def _steal_penalty(task, worker) -> float:
-    return STEAL_PENALTY
+def _base_spec(seed: int):
+    """The greedy-baseline recording configuration: the single registry
+    definition (``replay_baseline``) both replay benchmarks record under,
+    re-seeded (recorded into the trace header, so replay needs no factory)."""
+    from repro import spec
+
+    base = dataclasses.replace(spec.named("replay_baseline"), seed=seed)
+    assert (base.num_domains == NUM_DOMAINS
+            and base.penalty.value == STEAL_PENALTY), \
+        "benchmark constants drifted from the replay_baseline registry policy"
+    return base
 
 
 def _record_baseline(workload, seed: int):
-    from repro.runtime import Executor
-    from repro.trace import TraceRecorder, drive
+    from repro.trace import drive
 
-    rec = TraceRecorder()
-    ex = rec.attach(Executor(NUM_DOMAINS, steal_order="cyclic",
-                             steal_penalty=_steal_penalty, seed=seed))
-    drive(ex, workload)
-    return rec.finish()
+    built = _base_spec(seed).build()
+    drive(built.executor, workload)
+    return built.recorder.finish()
 
 
-def _governors(trace):
-    from repro.runtime import AdaptiveSteal, GreedySteal, NoSteal
+def _arms(trace, seed: int):
+    """Replay arm -> spec.  Three arms are pure spec edits of the baseline;
+    the measured arm overrides the governor with an *instance* seeded from
+    the recorded service times (``MeasuredPenalty.from_trace`` state is
+    data-derived, not configuration)."""
+    from repro.spec import GovernorSpec, TraceSpec
     from repro.trace import MeasuredPenalty
 
+    base = dataclasses.replace(_base_spec(seed), trace=TraceSpec())
+
+    def gov(**kw):
+        return dataclasses.replace(base, governor=GovernorSpec(**kw))
+
     return {
-        "static": NoSteal(),
-        "greedy": GreedySteal(),
-        "adaptive": AdaptiveSteal(penalty_hint=STEAL_PENALTY),
-        "measured": MeasuredPenalty.from_trace(trace),
+        "static": (gov(kind="none"), None),
+        "greedy": (base, None),
+        "adaptive": (gov(kind="adaptive", penalty_hint=STEAL_PENALTY), None),
+        "measured": (base, MeasuredPenalty.from_trace(trace)),
     }
 
 
@@ -73,27 +96,31 @@ def _scenarios(steps: int, seed: int):
                 standard_scenarios(NUM_DOMAINS, steps, seed).items())}
 
 
-def main(steps: int = 48, seed: int = 0) -> list[str]:
-    from repro.trace import executor_from_meta, replay
+def main(steps: int = 48, seed: int = 0, spec=None) -> list[str]:
+    from repro.trace import replay
 
     lines = ["scenario,governor,tasks,local_frac,steal_frac,steal_penalty,"
              "idle_polls,steps,theta"]
     for scen, workload in _scenarios(steps, seed).items():
         trace = _record_baseline(workload, seed)
 
-        # determinism gate: a policy-equivalent replay must reproduce the
+        # determinism gate: the header-embedded spec must reproduce the
         # recorded stats bit-for-bit before any A/B is meaningful.
-        base = replay(trace, lambda tr: executor_from_meta(
-            tr, steal_penalty=_steal_penalty), assert_match=True)
-        again = replay(trace, lambda tr: executor_from_meta(
-            tr, steal_penalty=_steal_penalty))
+        base = replay(trace, assert_match=True)
+        again = replay(trace)
         assert base.stats == again.stats, f"replay nondeterministic on {scen}"
 
-        for name, gov in _governors(trace).items():
-            res = replay(trace, lambda tr: executor_from_meta(
-                tr, governor=gov, steal_penalty=_steal_penalty))
+        if spec is not None:
+            arms = {"spec": (dataclasses.replace(spec, seed=seed), None)}
+        else:
+            arms = _arms(trace, seed)
+        for name, (arm_spec, gov_override) in arms.items():
+            res = replay(trace, lambda tr: arm_spec.build(
+                governor=gov_override).executor)
             s = res.executor.stats
             assert s.executed == trace.n_tasks, (scen, name, s.executed)
+            gov = res.executor.governor
+            gov = getattr(gov, "inner", None) or gov
             theta = getattr(gov, "threshold", "")
             lines.append(
                 f"{scen},{name},{s.executed},{s.local_fraction:.3f},"

@@ -4,19 +4,26 @@
 
 Serves one stream of skewed requests through the ``ServingEngine`` twice —
 uncontrolled (home routing, greedy stealing, one request per grab) and
-controlled (``repro.control.ControlLoop``: cost-aware routing, adaptive
-continuous batching, storm circuit-breaker) — and checks the contract that
-makes online control safe to turn on: decoded tokens are bit-identical,
-only the scheduling statistics move.  Finally records the controlled
-router's behaviour as a trace and replays it to show controlled runs stay
-deterministically replayable.
+controlled (cost-aware routing, adaptive continuous batching, storm
+circuit-breaker) — and checks the contract that makes online control safe
+to turn on: decoded tokens are bit-identical, only the scheduling
+statistics move.
+
+Both arms are declarative ``repro.spec`` policies: the controlled arm is
+the registry entry ``controlled_serving`` and the uncontrolled arm is the
+same spec with the control plane edited out — no constructor wiring.
+Finally the controlled router's behaviour is recorded as a trace and
+replayed *from the header spec alone* (``trace.replay(t)``, no factory),
+asserting the replayed scheduler statistics are bit-identical to the
+recorded ones.
 """
+import dataclasses
+
 import jax
 import numpy as np
 
-from repro import trace
+from repro import spec, trace
 from repro.configs import get_config, reduce_config
-from repro.control import BatchGovernor, ControlLoop, CostRouter, StormBreaker
 from repro.models.model import build_model
 from repro.serving.engine import Request, ServingEngine
 
@@ -35,10 +42,8 @@ def make_requests(cfg, seed=0):
     return reqs
 
 
-def serve(model, params, cfg, *, control=None, batch=1, rec=None):
-    eng = ServingEngine(model, params, num_replicas=NUM_REPLICAS, max_seq=64,
-                        policy="locality", batch=batch, control=control,
-                        trace=rec)
+def serve(model, params, cfg, policy_spec, *, rec=None):
+    eng = ServingEngine(model, params, spec=policy_spec, trace=rec)
     for r in make_requests(cfg):
         eng.submit(r)
     done = eng.run_until_drained()
@@ -50,18 +55,22 @@ def main():
     model = build_model(cfg, max_pos=96)
     params = model.init_params(jax.random.key(0))
 
-    base_eng, base_out = serve(model, params, cfg)
+    ctl_spec = spec.named("controlled_serving")
+    # the uncontrolled arm = the same declared system minus the control
+    # plane: greedy stealing, default routing, single-request grabs.
+    base_spec = dataclasses.replace(
+        ctl_spec, governor=spec.GovernorSpec(kind="greedy"),
+        router=spec.RouterSpec(kind="none"), batch=spec.BatchSpec())
+
+    base_eng, base_out = serve(model, params, cfg, base_spec)
     print(f"uncontrolled: served={base_eng.stats.served} "
           f"local={base_eng.stats.locality_fraction:.0%} "
           f"stolen={base_eng.stats.stolen} "
           f"prefill_tokens={base_eng.stats.prefill_tokens}")
 
-    loop = ControlLoop(
-        router=CostRouter(spill_penalty=8.0),
-        batcher=BatchGovernor(target_service=24.0, batch_cap=4),
-        breaker=StormBreaker(width=2, cooldown=2, min_executed=2))
     rec = trace.TraceRecorder()
-    ctl_eng, ctl_out = serve(model, params, cfg, control=loop, rec=rec)
+    ctl_eng, ctl_out = serve(model, params, cfg, ctl_spec, rec=rec)
+    loop = ctl_eng.control
     print(f"controlled:   served={ctl_eng.stats.served} "
           f"local={ctl_eng.stats.locality_fraction:.0%} "
           f"stolen={ctl_eng.stats.stolen} "
@@ -73,19 +82,13 @@ def main():
     assert ctl_eng.stats.prefill_tokens <= base_eng.stats.prefill_tokens, \
         "control plane should never re-prefill more than greedy stealing"
 
-    # the controlled router's schedule replays deterministically (scheduling
-    # only: payloads are opaque, the model does not re-run)
-    from repro.runtime import GreedySteal
+    # the controlled router's schedule replays deterministically from the
+    # header-embedded spec alone — no factory, no rebuilt control loop
+    # (scheduling only: payloads are opaque, the model does not re-run)
     t = rec.finish()
-    res = trace.replay(t, lambda tr: ControlLoop(
-        router=CostRouter(spill_penalty=8.0),
-        batcher=BatchGovernor(target_service=24.0, batch_cap=4),
-        breaker=StormBreaker(width=2, cooldown=2, min_executed=2)).attach(
-            trace.executor_from_meta(
-                tr, governor=GreedySteal(),
-                steal_penalty=lambda task, w: task.cost)))
-    print(f"replayed controlled schedule: executed={res.stats['executed']:.0f}"
-          f" (recorded {t.stats['executed']:.0f})")
+    res = trace.replay(t, assert_match=True)
+    print(f"replayed controlled schedule from header spec: bit-identical "
+          f"(executed={res.stats['executed']:.0f})")
     print(trace.render_timeline(t.events, num_workers=NUM_REPLICAS, width=2))
     print("\ncontrol serving smoke OK")
 

@@ -8,13 +8,17 @@ the per-worker steal timeline with storm detection, replays the recorded
 submission trace and checks the scheduler statistics reproduce exactly,
 and finally seeds a ``MeasuredPenalty`` governor from the measured service
 times — the whole trace loop on a problem small enough for CI.
+
+Every executor here is built from a declarative ``repro.spec.RuntimeSpec``,
+so the recorded trace headers embed the full policy (schema v2) and both
+replays run from the trace file alone — no factories.
 """
 import os
 import tempfile
 
 import numpy as np
 
-from repro import trace
+from repro import spec, trace
 from repro.kernels.jacobi.ref import jacobi_sweep_ref
 from repro.stencil.jacobi import run_runtime_sweep
 
@@ -26,9 +30,9 @@ def main():
     f = rng.standard_normal((80, 12, 16)).astype(np.float32)
 
     # -- record: one online sweep, slab tasks homed contiguously ------------
+    sweep_spec = spec.RuntimeSpec(num_domains=NUM_DOMAINS)
     rec = trace.TraceRecorder()
-    out, stats = run_runtime_sweep(f, di=5, num_domains=NUM_DOMAINS,
-                                   workers_per_domain=1, trace=rec)
+    out, stats = run_runtime_sweep(f, di=5, spec=sweep_spec, trace=rec)
     assert np.array_equal(out, np.asarray(jacobi_sweep_ref(f))), "physics!"
     t = rec.finish()
     print(f"recorded: {t.n_tasks} slab tasks, {t.total_steps} rounds, "
@@ -58,24 +62,24 @@ def main():
     # -- storm demo: the contiguous sweep is storm-free by construction, so
     # drive a hot-domain-skewed arrival stream through the runtime to show
     # the detectors firing and the measured θ reacting to real steals.
-    from repro.runtime import Executor
-
     wl = trace.hot_skew(trace.poisson(rate=NUM_DOMAINS, steps=24,
                                       num_domains=NUM_DOMAINS, seed=1),
                         hot_domain=0, p_hot=0.85, seed=1)
-    rec2 = trace.TraceRecorder()
-    ex = rec2.attach(Executor(NUM_DOMAINS,
-                              steal_penalty=lambda task, w: 4.0 * task.cost))
+    storm_spec = spec.RuntimeSpec(
+        num_domains=NUM_DOMAINS,
+        penalty=spec.PenaltySpec(kind="cost_factor", value=4.0),
+        trace=spec.TraceSpec(record=True))
+    built = storm_spec.build()
+    ex = built.executor
     trace.drive(ex, wl)
-    t2 = rec2.finish()
+    t2 = built.recorder.finish()
     print(f"\nskewed workload {wl.name}: {t2.n_tasks} tasks, "
           f"steal={ex.stats.steal_fraction:.0%}")
     print(trace.render_timeline(t2.events, num_workers=NUM_DOMAINS, width=4))
     storms = trace.detect_steal_storms(t2.events, width=4)
     print(f"steal-storm windows: {[w.start for w in storms]}")
     assert storms, "hot-skew stream should provoke a steal storm"
-    trace.replay(t2, lambda tr: trace.executor_from_meta(
-        tr, steal_penalty=lambda task, w: 4.0 * task.cost), assert_match=True)
+    trace.replay(t2, assert_match=True)      # rebuilt from the header spec
 
     # -- feedback: measured service times -> adaptive θ ---------------------
     gov = trace.MeasuredPenalty.from_trace(t2)

@@ -19,10 +19,15 @@ batching this executor serves one item per worker-round whatever it costs,
 and depth, not cost, is the wait; the two controllers are designed as a
 pair, not as independent toggles.)
 Homed tasks stay home unless the home's backlog exceeds the best domain's
-by more than ``spill_penalty`` — i.e. a task is only sent away from its
+by more than the spill threshold — i.e. a task is only sent away from its
 data when the queueing-delay gap is worth more than the nonlocal access it
 will pay (the same θ-style trade the ``AdaptiveSteal`` governor prices on
-the dequeue side).
+the dequeue side).  With ``measured=True`` that threshold is not a static
+hint but the governor's live ``penalty_estimate`` (``AdaptiveSteal`` /
+``trace.MeasuredPenalty``, unwrapped through a ``StormBreaker`` decorator):
+the router and the governor then price the *same* nonlocal cost from the
+same measurements, submit-side and dequeue-side respectively
+(``repro.spec.RouterSpec(spill="measured")``).
 """
 from __future__ import annotations
 
@@ -42,10 +47,16 @@ class CostRouter:
                     cheapest domain; 0 makes every task join the shortest
                     work queue, ``None`` never spills homed tasks (pure
                     locality routing for homed, cost routing for homeless).
+    measured:       price the spill threshold from the bound executor's
+                    governor ``penalty_estimate`` instead of the static
+                    ``spill_penalty`` hint (which remains the fallback for
+                    governors that measure nothing, e.g. ``GreedySteal``).
     """
 
-    def __init__(self, spill_penalty: Optional[float] = 4.0):
+    def __init__(self, spill_penalty: Optional[float] = 4.0,
+                 measured: bool = False):
         self.spill_penalty = spill_penalty
+        self.measured = measured
         self._ex: Optional[Executor] = None
         self._workers_per_domain: list[int] = []
         self.routed = 0
@@ -72,17 +83,29 @@ class CostRouter:
             return math.inf
         return self._ex.queues.cost(domain) / workers
 
+    def spill_threshold(self) -> Optional[float]:
+        """The live spill threshold: the governor's measured penalty
+        estimate when ``measured`` (unwrapping a ``StormBreaker``'s inner
+        governor), else the static ``spill_penalty`` hint."""
+        if self.measured and self._ex is not None:
+            gov = self._ex.governor
+            gov = getattr(gov, "inner", None) or gov    # breaker decoration
+            est = getattr(gov, "penalty_estimate", None)
+            if est is not None:
+                return float(est)
+        return self.spill_penalty
+
     def route(self, task: Task) -> int:
         """Submit domain for ``task``: least-backlog, home-sticky up to
-        ``spill_penalty`` (the ``Executor(router=...)`` callback)."""
+        ``spill_threshold()`` (the ``Executor(router=...)`` callback)."""
         backlogs = [self.backlog_time(d)
                     for d in range(self._ex.num_domains)]
         best = min(range(len(backlogs)), key=lambda d: (backlogs[d], d))
         self.routed += 1
         home = task.home
         if 0 <= home < len(backlogs) and backlogs[home] < math.inf:
-            if (self.spill_penalty is None
-                    or backlogs[home] - backlogs[best] <= self.spill_penalty):
+            spill = self.spill_threshold()
+            if spill is None or backlogs[home] - backlogs[best] <= spill:
                 return home
             self.spilled += 1
         return best

@@ -143,6 +143,12 @@ class Executor:
         self.batch = batch
         self.batch_handler = batch_handler
         self.step_hook = step_hook
+        # the declarative configuration this executor was built from, when
+        # constructed via repro.spec (``RuntimeSpec.build`` stamps it here);
+        # trace headers embed it so a recorded run fully names its system.
+        # Raw-kwarg construction (this __init__ called directly) is the thin
+        # deprecated path and leaves it None.
+        self.spec = None
         self.results: list[Any] = []
         self._uids = itertools.count()
         self._rr = 0

@@ -41,6 +41,17 @@ contract; a fused padded-batch decode is a later kernel-level step).  Pass
 ``control=repro.control.ControlLoop(...)`` to attach the full control
 plane (cost routing, adaptive batching, the steal circuit-breaker) to the
 engine's router.
+
+Spec construction (the preferred path): pass
+``spec=repro.spec.RuntimeSpec`` with a ``serving`` block —
+``spec.named("controlled_serving")`` is the canonical example — and the
+engine builds its whole router from the spec: queues, steal order,
+governor (+ breaker), penalty rule, batch policy, and control plane all
+come from the declared configuration, and traces recorded off the engine
+embed the spec (schema v2), so ``repro.trace.replay(trace)`` reconstructs
+the exact router with no hand-written factory.  The raw kwargs
+(``policy``/``num_replicas``/``max_seq``/``pool_cap``/``batch``/
+``control``) remain as a thin deprecated path.
 """
 from __future__ import annotations
 
@@ -125,7 +136,21 @@ class ServingEngine:
                  pool_cap: Optional[int] = 256,
                  trace: Optional[TraceRecorder] = None,
                  batch: Any = 1,
-                 control: Optional[Any] = None):
+                 control: Optional[Any] = None,
+                 spec: Optional[Any] = None):
+        if spec is not None:
+            conflicts = [name for name, val, default in (
+                ("num_replicas", num_replicas, 2), ("max_seq", max_seq, 128),
+                ("policy", policy, "locality"), ("pool_cap", pool_cap, 256),
+                ("batch", batch, 1), ("control", control, None))
+                if val != default]
+            if conflicts:
+                from ..spec import SpecError
+                raise SpecError(
+                    f"spec-built engine: {conflicts} come from the spec "
+                    f"(serving/runtime blocks); drop the kwargs")
+            self._init_from_spec(model, params, spec, trace)
+            return
         if policy not in POLICIES:
             raise ValueError(policy)
         self.policy = policy
@@ -161,6 +186,53 @@ class ServingEngine:
             trace.attach(self._exec)
         self._prefill_base = 0      # first-prefill tokens of served requests
         self._accidental_local = 0  # served by home replica, any routing
+
+    def _init_from_spec(self, model: Model, params: Any, spec: Any,
+                        trace: Optional[TraceRecorder]) -> None:
+        """Build the whole router from a ``repro.spec.RuntimeSpec``."""
+        from ..spec import SpecError
+        if spec.serving is None:
+            raise SpecError("ServingEngine needs a spec with a serving "
+                            "block (see spec.named('controlled_serving'))")
+        sv = spec.serving
+        expected = 1 if sv.policy == "single_queue" else sv.num_replicas
+        if spec.num_domains != expected:
+            raise SpecError(
+                f"serving policy {sv.policy!r} with {sv.num_replicas} "
+                f"replicas needs num_domains == {expected}, "
+                f"spec says {spec.num_domains}")
+        wd = spec.worker_domains
+        if wd is not None and len(wd) != sv.num_replicas:
+            raise SpecError(f"worker_domains pins {len(wd)} workers but "
+                            f"serving declares {sv.num_replicas} replicas")
+        if sv.policy != "locality" and spec.router.kind != "none":
+            # round_robin/single_queue submit with an explicit domain, so a
+            # declared router would never be consulted — and the recorded
+            # header would then name a policy that never ran.
+            raise SpecError(
+                f"serving policy {sv.policy!r} routes explicitly and would "
+                f"silently bypass router.kind={spec.router.kind!r}; use "
+                "policy 'locality' with a router, or router.kind 'none'")
+        if sv.policy == "single_queue" and wd is None:
+            # default one-worker-per-domain would under-staff the single
+            # shared queue; every replica serves domain 0.
+            spec = dataclasses.replace(spec,
+                                       worker_domains=(0,) * sv.num_replicas)
+        if trace is not None and spec.trace.record:
+            raise SpecError("spec already declares trace recording; drop "
+                            "the trace= kwarg (use Built.recorder instead)")
+        self.policy = sv.policy
+        self.replicas = [Replica(model, params, sv.max_seq)
+                         for _ in range(sv.num_replicas)]
+        built = spec.build(batch_handler=self._run_grab)
+        self._exec = built.executor
+        self.control = built.control
+        self.trace = built.recorder
+        if trace is not None:
+            trace.attach(self._exec)
+            self.trace = trace
+        self._prefill_base = 0
+        self._accidental_local = 0
 
     # -- runtime callbacks ---------------------------------------------------
     def _steal_penalty(self, task: Task, worker: Worker) -> float:

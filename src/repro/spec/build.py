@@ -1,0 +1,163 @@
+"""Build a live, fully wired runtime system from a ``RuntimeSpec``.
+
+``build(spec)`` is the single construction path the spec API promises: it
+creates the ``Executor``, installs the declared router / batch policy /
+breaker through a ``repro.control.ControlLoop`` (the same splice points a
+hand-wired control plane uses), stamps the spec onto the executor
+(``Executor.spec`` — what the trace header embeds, making every recorded
+run self-describing), and attaches a ``TraceRecorder`` last so a streamed
+header names the effective, breaker-wrapped governor.
+
+Build-time overrides carry the values a spec deliberately cannot hold —
+callables and live objects:
+
+    handler / batch_handler   task execution callbacks
+    steal_penalty             a custom penalty fn (replaces ``PenaltySpec``;
+                              the built executor then no longer embeds the
+                              spec, since the spec would misname the run)
+    governor                  a pre-built governor instance (e.g. a
+                              ``MeasuredPenalty`` seeded from a trace) —
+                              same embedding caveat
+    trace_path                directory for streamed trace segments when
+                              ``TraceSpec.segment_records`` is set
+
+Everything a ``Built`` executor does is deterministic for the spec's seed,
+so two builds of the same spec driven identically produce bit-identical
+``RuntimeStats`` — the property that makes ``replay(trace)`` from an
+embedded spec an exact reconstruction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from ..runtime import (AdaptiveSteal, Executor, GreedySteal, NoSteal,
+                       StealGovernor, Task, Worker)
+from .model import (BatchSpec, GovernorSpec, PenaltySpec, RouterSpec,
+                    RuntimeSpec, SpecError)
+
+
+@dataclasses.dataclass
+class Built:
+    """The live system a ``RuntimeSpec`` declares.
+
+    ``executor`` is always present; ``control`` (a wired
+    ``repro.control.ControlLoop``) exists when the spec declares a cost
+    router, a governed batch, or a breaker; ``recorder`` (an attached
+    ``repro.trace.TraceRecorder``) when ``TraceSpec.record`` is set.
+    """
+
+    spec: RuntimeSpec
+    executor: Executor
+    control: Optional[Any] = None      # repro.control.ControlLoop
+    recorder: Optional[Any] = None     # repro.trace.TraceRecorder
+
+
+def build_penalty(spec: PenaltySpec) -> Optional[Callable[[Task, Worker], float]]:
+    """The ``Executor(steal_penalty=...)`` callable a ``PenaltySpec`` names."""
+    if spec.kind == "none":
+        return None
+    value = spec.value
+    if spec.kind == "constant":
+        return lambda task, worker: value
+    if spec.kind == "cost_factor":
+        return lambda task, worker: value * task.cost
+    # cost_if_homed: only a homed task (a cached prefix somewhere) pays to
+    # migrate — the serving engine's re-prefill rule.
+    return lambda task, worker: value * task.cost if task.home >= 0 else 0.0
+
+
+def build_governor(spec: GovernorSpec) -> StealGovernor:
+    """The *inner* governor (breaker decoration is applied by ``build``)."""
+    if spec.kind == "greedy":
+        return GreedySteal()
+    if spec.kind == "none":
+        return NoSteal()
+    if spec.kind == "measured":
+        from ..trace import MeasuredPenalty      # lazy: trace imports runtime
+        cls = MeasuredPenalty
+    else:
+        cls = AdaptiveSteal
+    return cls(penalty_hint=spec.penalty_hint, task_cost=spec.task_cost,
+               ema=spec.ema, max_threshold=spec.max_threshold)
+
+
+def _needs_control(spec: RuntimeSpec) -> bool:
+    return (spec.router.kind == "cost"
+            or spec.batch.kind == "governed"
+            or spec.governor.breaker is not None)
+
+
+def build(spec: RuntimeSpec, *,
+          handler=None, batch_handler=None,
+          steal_penalty=None, governor: StealGovernor | None = None,
+          trace_path=None) -> Built:
+    """Construct the system ``spec`` declares (see module docstring)."""
+    overridden = steal_penalty is not None or governor is not None
+    if steal_penalty is None:
+        steal_penalty = build_penalty(spec.penalty)
+    if governor is None:
+        governor = build_governor(spec.governor)
+
+    batch: Any = spec.batch.size if spec.batch.kind == "fixed" else 1
+    ex = Executor(
+        spec.num_domains,
+        None if spec.worker_domains is None else list(spec.worker_domains),
+        handler=handler,
+        pool_cap=spec.pool_cap,
+        steal_order=spec.steal_order,
+        governor=governor,
+        steal_penalty=steal_penalty,
+        seed=spec.seed,
+        record_events=spec.record_events,
+        event_maxlen=spec.event_maxlen,
+        batch=batch,
+        batch_handler=batch_handler,
+    )
+
+    control = None
+    if _needs_control(spec):
+        from ..control import (BatchGovernor, ControlLoop, CostRouter,
+                               StormBreaker)
+        router = None
+        if spec.router.kind == "cost":
+            router = CostRouter(spill_penalty=spec.router.spill_penalty,
+                                measured=spec.router.spill == "measured")
+        batcher = None
+        if spec.batch.kind == "governed":
+            b = spec.batch
+            batcher = BatchGovernor(target_service=b.target_service,
+                                    batch_min=b.batch_min,
+                                    batch_cap=b.batch_cap, ema=b.ema,
+                                    init_size=b.init_size)
+        breaker = None
+        if spec.governor.breaker is not None:
+            k = spec.governor.breaker
+            breaker = StormBreaker(width=k.width, steal_frac=k.steal_frac,
+                                   inline_frac=k.inline_frac,
+                                   min_executed=k.min_executed,
+                                   cooldown=k.cooldown, mode=k.mode,
+                                   boost=k.boost)
+        control = ControlLoop(router=router, batcher=batcher, breaker=breaker)
+        control.attach(ex)
+    if spec.router.kind == "round_robin":
+        ex.router = lambda task: ex.next_round_robin()
+
+    # Stamp the spec so trace headers fully name this system — unless a
+    # build-time override made the spec an incomplete description.
+    ex.spec = None if overridden else spec
+
+    recorder = None
+    if spec.trace.record:
+        from ..trace import TraceRecorder, TraceWriter   # lazy: avoid cycle
+        stream = None
+        if spec.trace.segment_records is not None:
+            if trace_path is None:
+                raise SpecError("trace.segment_records is set: build needs "
+                                "trace_path= (segment directory) to stream")
+            stream = TraceWriter(trace_path,
+                                 segment_records=spec.trace.segment_records)
+        recorder = TraceRecorder(stream=stream)
+        recorder.attach(ex)          # last: header sees the wired governor
+
+    return Built(spec=spec, executor=ex, control=control, recorder=recorder)

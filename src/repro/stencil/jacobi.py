@@ -171,7 +171,8 @@ def run_runtime_sweep(f, c: float = 1.0 / 6.0, di: int = 10,
                       governor: StealGovernor | None = None,
                       pool_cap: int = 256,
                       seed: int = 0,
-                      trace=None) -> tuple[np.ndarray, RuntimeStats]:
+                      trace=None,
+                      spec=None) -> tuple[np.ndarray, RuntimeStats]:
     """One whole-lattice sweep executed as online runtime tasks.
 
     The third execution path next to the shard_map'd SPMD sweeps above: the
@@ -188,6 +189,11 @@ def run_runtime_sweep(f, c: float = 1.0 / 6.0, di: int = 10,
     and deterministic replay (``repro.trace.replay`` re-drives the same
     slab arrival sequence under any policy; the replayed task payloads are
     placeholders — replay studies the *schedule*, not the physics).
+
+    ``spec`` takes a ``repro.spec.RuntimeSpec`` and builds the executor
+    from it (the preferred path — the scheduling-policy kwargs above are
+    then ignored, and a recorded trace embeds the spec so ``replay(trace)``
+    reconstructs the schedule with no factory).
     """
     f = np.asarray(f)
     ni = f.shape[0]
@@ -207,10 +213,20 @@ def run_runtime_sweep(f, c: float = 1.0 / 6.0, di: int = 10,
         # keeps only rows that saw the true halo planes, so values are exact.
         out[i0:i0 + di] = np.asarray(jacobi_sweep_ref(jnp.asarray(padded), c))[1:-1]
 
-    ex = Executor(num_domains, [d for d in range(num_domains)
-                                for _ in range(workers_per_domain)],
-                  handler=update_slab, steal_order=steal_order,
-                  governor=governor, pool_cap=pool_cap, seed=seed)
+    if spec is not None:
+        if spec.trace.record:
+            from ..spec import SpecError
+            raise SpecError(
+                "run_runtime_sweep returns only (lattice, stats) and cannot "
+                "hand back a spec-declared recorder; record via the trace= "
+                "kwarg (and TraceSpec(record=False)) instead")
+        num_domains = spec.num_domains
+        ex = spec.build(handler=update_slab).executor
+    else:
+        ex = Executor(num_domains, [d for d in range(num_domains)
+                                    for _ in range(workers_per_domain)],
+                      handler=update_slab, steal_order=steal_order,
+                      governor=governor, pool_cap=pool_cap, seed=seed)
     if trace is not None:
         trace.attach(ex)
     for s in range(nslabs):

@@ -54,7 +54,8 @@ from .feedback import MeasuredPenalty
 from .io import TraceReader, TraceWriter, dumps_lines, loads_lines
 from .record import TraceRecorder, executor_meta
 from .replay import (ReplayComparison, ReplayResult, TaskTiming,
-                     compare_replays, executor_from_meta, replay, task_times)
+                     compare_replays, executor_from_meta, executor_from_spec,
+                     replay, task_times)
 from .schema import SCHEMA_VERSION, SubmissionRecord, Trace, TraceSchemaError
 from .storms import (Window, depth_imbalance, detect_inline_bursts,
                      detect_steal_storms, render_timeline, windows)
@@ -66,7 +67,7 @@ __all__ = [
     "TraceReader", "TraceWriter", "dumps_lines", "loads_lines",
     "TraceRecorder", "executor_meta",
     "ReplayComparison", "ReplayResult", "TaskTiming", "compare_replays",
-    "executor_from_meta", "replay", "task_times",
+    "executor_from_meta", "executor_from_spec", "replay", "task_times",
     "SCHEMA_VERSION", "SubmissionRecord", "Trace", "TraceSchemaError",
     "Window", "depth_imbalance", "detect_inline_bursts",
     "detect_steal_storms", "render_timeline", "windows",

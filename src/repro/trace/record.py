@@ -35,8 +35,15 @@ if TYPE_CHECKING:                                # no import cycle at runtime
 
 
 def executor_meta(ex: Executor) -> dict:
-    """The executor construction parameters a trace header records."""
-    return {
+    """The executor construction parameters a trace header records.
+
+    For executors built from a ``repro.spec.RuntimeSpec`` (``ex.spec`` is
+    set), the full serialized spec rides along under ``"spec"`` — the
+    schema-v2 guarantee that a trace completely names the system that
+    produced it (``replay(trace)`` rebuilds it with no executor argument).
+    The flat v1 fields stay alongside for older readers and quick greps.
+    """
+    meta = {
         "num_domains": ex.num_domains,
         "worker_domains": [w.domain for w in ex.pool],
         "steal_order": ex.queues.steal_order,
@@ -44,6 +51,10 @@ def executor_meta(ex: Executor) -> dict:
         "seed": ex.seed,
         "governor": type(ex.governor).__name__,
     }
+    spec = getattr(ex, "spec", None)
+    if spec is not None:
+        meta["spec"] = spec.to_dict()
+    return meta
 
 
 class TraceRecorder:

@@ -58,6 +58,28 @@ FIDELITY_KEYS = ("submitted", "executed", "local", "stolen", "inline_runs",
                  "local_fraction", "steal_fraction")
 
 
+def executor_from_spec(trace: Trace) -> Executor:
+    """Reconstruct the *exact* recorded system from the spec embedded in a
+    schema-v2 trace header: governor (with breaker decoration), router,
+    batch policy, penalty rule and all — the configuration is data, so no
+    hand-written factory is needed.  Raises ``ValueError`` when the trace
+    carries no spec (v1 traces, raw-kwarg executors): pass an explicit
+    ``executor_factory`` instead, as before v2.
+    """
+    sd = trace.spec_dict
+    if sd is None:
+        raise ValueError(
+            "trace header embeds no spec (v1 trace or raw-kwarg executor); "
+            "pass an executor_factory, e.g. executor_from_meta")
+    from ..spec import RuntimeSpec, TraceSpec   # lazy: spec builds trace objs
+    spec = RuntimeSpec.from_dict(sd)
+    # Replay re-drives the *scheduler*; re-attaching the recorded run's own
+    # recorder would at best waste memory and at worst (streamed segments)
+    # demand a trace_path nobody has — recording is the one block a replay
+    # deliberately does not reconstruct.  Stats are unaffected.
+    return dataclasses.replace(spec, trace=TraceSpec()).build().executor
+
+
 def executor_from_meta(trace: Trace, *,
                        governor: StealGovernor | None = None,
                        steal_penalty=None, handler=None,
@@ -217,8 +239,14 @@ def replay(trace: Trace,
            reroute: bool = False) -> ReplayResult:
     """Re-drive an executor through the trace's recorded arrival sequence.
 
-    ``executor_factory(trace) -> Executor`` supplies the executor (default:
-    ``executor_from_meta`` — the recorded configuration).  The factory must
+    ``executor_factory(trace) -> Executor`` supplies the executor.  The
+    default reconstructs the recorded configuration: when the header embeds
+    a spec (schema v2, spec-built executors) the *exact* system is rebuilt
+    from it (``executor_from_spec`` — governor, breaker, router, batch
+    policy, penalty rule), so ``replay(trace)`` with no arguments
+    reproduces the recorded ``RuntimeStats`` bit-for-bit; v1/spec-less
+    traces fall back to ``executor_from_meta`` (flat fields only — pass a
+    factory for penalty functions etc., as before v2).  The factory must
     return a *fresh* executor whose step clock is at 0.  With
     ``assert_match=True`` the replayed stats are checked bit-for-bit
     against the recorded footer stats (use only with a policy-equivalent
@@ -234,7 +262,10 @@ def replay(trace: Trace,
     if reroute and assert_match:
         raise ValueError("reroute re-decides routing; recorded stats are "
                          "not expected to match")
-    ex = (executor_factory or executor_from_meta)(trace)
+    if executor_factory is None:
+        executor_factory = (executor_from_spec if trace.spec_dict is not None
+                            else executor_from_meta)
+    ex = executor_factory(trace)
     if ex.step_count != 0:
         raise ValueError("replay needs a fresh executor (step clock at 0)")
     for rec in trace.submissions:

@@ -7,7 +7,11 @@ scheduler did.  It has four record kinds, serialized one-JSON-object-per-line
 
   header      — schema version + the executor's construction parameters
                 (``num_domains``, ``worker_domains``, ``steal_order``,
-                ``pool_cap``, ``seed``, governor class name)
+                ``pool_cap``, ``seed``, governor class name) and, for
+                executors built from a ``repro.spec.RuntimeSpec`` (schema
+                v2), the full serialized spec under ``spec`` — the complete
+                name of the system that produced the trace, enough for
+                ``replay()`` to reconstruct it with no executor argument
   submission  — one per submitted task: ``(uid, step, home, cost, domain)``
                 where ``step`` is the scheduling round at submission time
                 (the arrival clock) and ``domain`` the queue it was routed
@@ -20,7 +24,9 @@ scheduler did.  It has four record kinds, serialized one-JSON-object-per-line
                 ``RuntimeStats`` snapshot, the replay-fidelity oracle.
 
 ``SCHEMA_VERSION`` gates the reader: traces written by a future incompatible
-format raise instead of silently mis-replaying.
+format raise instead of silently mis-replaying.  v1 traces (pre-spec
+headers) stay readable — their headers simply carry no ``spec``, so replay
+falls back to ``executor_from_meta`` / an explicit factory, as before v2.
 """
 from __future__ import annotations
 
@@ -29,7 +35,8 @@ from typing import Any, Iterable
 
 from ..runtime import Event
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+SUPPORTED_SCHEMAS = (1, SCHEMA_VERSION)
 TRACE_KIND = "repro.runtime-trace"
 
 
@@ -63,6 +70,13 @@ class Trace:
     @property
     def num_domains(self) -> int:
         return int(self.meta["num_domains"])
+
+    @property
+    def spec_dict(self) -> dict[str, Any] | None:
+        """The serialized ``repro.spec.RuntimeSpec`` embedded in the header
+        (schema v2, spec-built executors), or None for v1 / raw-kwarg
+        traces.  Parse with ``repro.spec.RuntimeSpec.from_dict``."""
+        return self.meta.get("spec")
 
     @property
     def n_tasks(self) -> int:
@@ -130,10 +144,10 @@ def parse_records(records: Iterable[dict[str, Any]]) -> Trace:
         if r == "header":
             if rec.get("kind") != TRACE_KIND:
                 raise TraceSchemaError(f"not a runtime trace: {rec.get('kind')!r}")
-            if rec.get("schema") != SCHEMA_VERSION:
+            if rec.get("schema") not in SUPPORTED_SCHEMAS:
                 raise TraceSchemaError(
-                    f"trace schema {rec.get('schema')!r} != "
-                    f"supported {SCHEMA_VERSION}")
+                    f"trace schema {rec.get('schema')!r} not in "
+                    f"supported {SUPPORTED_SCHEMAS}")
             meta = {k: v for k, v in rec.items()
                     if k not in ("record", "kind", "schema")}
         elif r == "submission":

@@ -241,6 +241,44 @@ class TestCostRouter:
         assert router.route(Task(uid=3, home=0)) == 1        # gap 6 > 4
         assert router.spilled == 1
 
+    def test_measured_spill_tracks_governor_estimate(self):
+        # spill="measured": the threshold is the governor's live penalty
+        # estimate, not the static hint (ROADMAP control follow-up).
+        gov = AdaptiveSteal(penalty_hint=10.0)
+        ex = Executor(2, governor=gov)
+        router = CostRouter(spill_penalty=4.0, measured=True).bind(ex)
+        assert router.spill_threshold() == 10.0          # estimate, not 4.0
+        # estimate decays toward observed penalties -> threshold follows
+        for _ in range(50):
+            gov.on_execute(Worker(wid=0, domain=0), stolen=True, penalty=2.0)
+        assert router.spill_threshold() == pytest.approx(gov.penalty_estimate)
+        assert router.spill_threshold() < 4.0
+
+    def test_measured_spill_unwraps_breaker_and_falls_back(self):
+        # a StormBreaker decorates the governor: the router must read the
+        # inner estimate through it...
+        gov = AdaptiveSteal(penalty_hint=7.0)
+        ex = Executor(2, governor=StormBreaker(gov))
+        router = CostRouter(spill_penalty=4.0, measured=True).bind(ex)
+        assert router.spill_threshold() == 7.0
+        # ...and governors that measure nothing fall back to the hint.
+        ex2 = Executor(2, governor=GreedySteal())
+        router2 = CostRouter(spill_penalty=4.0, measured=True).bind(ex2)
+        assert router2.spill_threshold() == 4.0
+
+    def test_measured_spill_changes_routing_decision(self):
+        # same backlog gap: static hint 4.0 keeps the task home, a learned
+        # low penalty (cheap steals -> cheap spills) sends it away.
+        def mk(measured, learned):
+            gov = AdaptiveSteal(penalty_hint=learned, ema=1.0)
+            ex = Executor(2, governor=gov)
+            r = CostRouter(spill_penalty=4.0, measured=measured).bind(ex)
+            ex.queues.enqueue(Task(uid=0, cost=3.0), 0)
+            return r.route(Task(uid=1, home=0))
+
+        assert mk(False, 1.0) == 0        # static: gap 3 <= 4, stay home
+        assert mk(True, 1.0) == 1         # measured: gap 3 > 1, spill
+
     def test_never_routes_to_unserved_domain(self):
         # domain 2 has no pinned worker: the router must not feed it
         ex = Executor(3, worker_domains=[0, 1])

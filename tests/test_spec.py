@@ -1,0 +1,336 @@
+"""repro.spec: round-trips, golden files, strictness, build equivalence."""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro import spec, trace
+from repro.control import BatchGovernor, ControlLoop, CostRouter, StormBreaker
+from repro.runtime import (AdaptiveSteal, Executor, GreedySteal, NoSteal,
+                           Task, Worker)
+
+SPECS_DIR = os.path.join(os.path.dirname(__file__), os.pardir, "specs")
+
+
+def _workload(num_domains=4, steps=24, seed=5):
+    return trace.lognormal_costs(
+        trace.hot_skew(trace.poisson(rate=num_domains, steps=steps,
+                                     num_domains=num_domains, seed=seed),
+                       hot_domain=0, p_hot=0.8, seed=seed),
+        median=2.0, sigma=0.75, seed=seed)
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("name", spec.policy_names())
+    def test_registry_json_round_trip_exact(self, name):
+        s = spec.named(name)
+        assert spec.RuntimeSpec.from_json(s.to_json()) == s
+        # and through a dict round-trip (what trace headers embed)
+        assert spec.RuntimeSpec.from_dict(
+            json.loads(json.dumps(s.to_dict()))) == s
+
+    def test_worker_domains_tuple_normalization(self):
+        s = spec.RuntimeSpec(num_domains=2, worker_domains=[0, 0, 1])
+        assert s.worker_domains == (0, 0, 1)
+        assert spec.RuntimeSpec.from_json(s.to_json()) == s
+
+    def test_canonical_json_is_stable(self):
+        s = spec.named("controlled_replay")
+        assert s.to_json() == spec.RuntimeSpec.from_json(s.to_json()).to_json()
+
+
+class TestGoldenFiles:
+    """specs/<name>.json pins the canonical JSON of every registry policy."""
+
+    @pytest.mark.parametrize("name", spec.policy_names())
+    def test_golden_file_matches_registry(self, name):
+        path = os.path.join(SPECS_DIR, f"{name}.json")
+        with open(path, "r", encoding="utf-8") as fh:
+            text = fh.read()
+        assert text == spec.named(name).to_json(), (
+            f"{path} is stale: regenerate with "
+            f"spec.dump(spec.named({name!r}), {path!r})")
+
+    def test_no_orphan_golden_files(self):
+        on_disk = {f[:-5] for f in os.listdir(SPECS_DIR)
+                   if f.endswith(".json")}
+        assert on_disk == set(spec.policy_names())
+
+
+class TestStrictness:
+    def test_unknown_top_level_field(self):
+        d = spec.named("paper_cyclic").to_dict()
+        d["pool_capp"] = 7
+        with pytest.raises(spec.SpecError, match="pool_capp"):
+            spec.RuntimeSpec.from_dict(d)
+
+    def test_unknown_nested_field(self):
+        d = spec.named("controlled_replay").to_dict()
+        d["governor"]["breaker"]["widht"] = 4
+        with pytest.raises(spec.SpecError, match="widht"):
+            spec.RuntimeSpec.from_dict(d)
+
+    def test_unknown_spec_version(self):
+        d = spec.named("paper_cyclic").to_dict()
+        d["spec_version"] = 99
+        with pytest.raises(spec.SpecError, match="spec_version"):
+            spec.RuntimeSpec.from_dict(d)
+
+    def test_invalid_json_text(self):
+        with pytest.raises(spec.SpecError, match="JSON"):
+            spec.RuntimeSpec.from_json("{not json")
+
+    @pytest.mark.parametrize("payload,match", [
+        ({"governor": {"ema": "0.5"}}, "governor.ema"),
+        ({"governor": {"penalty_hint": "4.0"}}, "governor.penalty_hint"),
+        ({"governor": {"breaker": {"width": 2.5}}}, "governor.breaker.width"),
+        ({"batch": {"size": "8"}}, "batch.size"),
+        ({"record_events": "yes"}, "record_events"),
+        ({"steal_order": 3}, "steal_order"),
+        ({"pool_cap": 2.5}, "pool_cap"),
+        ({"worker_domains": [0, "1"]}, "worker_domains"),
+        ({"serving": {"policy": 7}}, "serving.policy"),
+    ])
+    def test_wrong_typed_scalars_fail_parsing(self, payload, match):
+        """Strictness covers value *types*, not just field names: a
+        wrong-typed scalar must raise SpecError at parse time, never leak
+        a TypeError or survive into a built system."""
+        with pytest.raises(spec.SpecError, match=match):
+            spec.RuntimeSpec.from_dict(payload)
+
+    def test_int_widens_to_float_but_not_vice_versa(self):
+        s = spec.RuntimeSpec.from_dict(
+            {"penalty": {"kind": "constant", "value": 6}})
+        assert s.penalty.value == 6.0 and isinstance(s.penalty.value, float)
+        with pytest.raises(spec.SpecError, match="event_maxlen"):
+            spec.RuntimeSpec.from_dict({"event_maxlen": 6.5})
+
+    @pytest.mark.parametrize("make,match", [
+        (lambda: spec.RuntimeSpec(num_domains=0), "num_domains"),
+        (lambda: spec.RuntimeSpec(pool_cap=0), "pool_cap"),
+        (lambda: spec.RuntimeSpec(worker_domains=(0, 5)), "worker domain"),
+        (lambda: spec.GovernorSpec(kind="psychic"), "governor.kind"),
+        (lambda: spec.RouterSpec(kind="warp"), "router.kind"),
+        (lambda: spec.RouterSpec(spill="vibes"), "router.spill"),
+        (lambda: spec.BatchSpec(kind="vibe"), "batch.kind"),
+        (lambda: spec.PenaltySpec(kind="free_lunch"), "penalty.kind"),
+        (lambda: spec.ServingSpec(policy="chaos"), "serving.policy"),
+    ])
+    def test_bad_values_rejected(self, make, match):
+        with pytest.raises(spec.SpecError, match=match):
+            make()
+
+    def test_bad_steal_order_rejected_at_build(self):
+        with pytest.raises(ValueError, match="steal order"):
+            spec.RuntimeSpec(steal_order="sideways").build()
+
+    def test_unknown_policy_name(self):
+        with pytest.raises(spec.SpecError, match="nonexistent"):
+            spec.named("nonexistent")
+
+    def test_streaming_trace_needs_path(self):
+        s = spec.RuntimeSpec(trace=spec.TraceSpec(record=True,
+                                                  segment_records=8))
+        with pytest.raises(spec.SpecError, match="trace_path"):
+            s.build()
+
+
+class TestBuildEquivalence:
+    """Spec-built and hand-built systems are bit-identical under load."""
+
+    def _drive(self, ex):
+        wl = _workload()
+        trace.drive(ex, wl)
+        return ex.metrics.snapshot()
+
+    def test_paper_cyclic_matches_hand_built(self):
+        s = spec.named("paper_cyclic")
+        hand = Executor(4, steal_order="cyclic", governor=GreedySteal(),
+                        steal_penalty=lambda t, w: 4.0, seed=0)
+        assert self._drive(s.build().executor) == self._drive(hand)
+
+    def test_controlled_replay_matches_hand_built(self):
+        s = spec.named("controlled_replay")
+        loop = ControlLoop.full(spill_penalty=6.0, width=8)
+        hand = loop.attach(Executor(4, steal_order="cost_weighted",
+                                    governor=GreedySteal(),
+                                    steal_penalty=lambda t, w: 6.0, seed=0))
+        assert self._drive(s.build().executor) == self._drive(hand)
+
+    def test_round_robin_router_matches_explicit_routing(self):
+        s = spec.named("tasking_round_robin")
+        hand = Executor(4, steal_order="cyclic", governor=GreedySteal(),
+                        steal_penalty=lambda t, w: 4.0, seed=0)
+        wl = _workload()
+        by_step = wl.by_step()
+        for t in range(wl.horizon):
+            for a in by_step.get(t, ()):
+                hand.submit(hand.make_task(home=a.home, cost=a.cost),
+                            domain=hand.next_round_robin())
+            hand.step()
+        hand.run_until_drained()
+        assert self._drive(s.build().executor) == hand.metrics.snapshot()
+
+    def test_governor_kinds_build_expected_types(self):
+        from repro.trace import MeasuredPenalty
+
+        assert isinstance(spec.build_governor(
+            spec.GovernorSpec(kind="greedy")), GreedySteal)
+        assert isinstance(spec.build_governor(
+            spec.GovernorSpec(kind="none")), NoSteal)
+        g = spec.build_governor(spec.GovernorSpec(kind="adaptive",
+                                                  penalty_hint=9.0))
+        assert type(g) is AdaptiveSteal and g.penalty_estimate == 9.0
+        assert isinstance(spec.build_governor(
+            spec.GovernorSpec(kind="measured")), MeasuredPenalty)
+
+    def test_penalty_kinds(self):
+        w = Worker(wid=0, domain=0)
+        homed = Task(uid=0, home=1, cost=3.0)
+        homeless = Task(uid=1, home=-1, cost=3.0)
+        assert spec.build_penalty(spec.PenaltySpec()) is None
+        const = spec.build_penalty(spec.PenaltySpec("constant", 5.0))
+        assert const(homed, w) == const(homeless, w) == 5.0
+        factor = spec.build_penalty(spec.PenaltySpec("cost_factor", 2.0))
+        assert factor(homed, w) == 6.0
+        if_homed = spec.build_penalty(spec.PenaltySpec("cost_if_homed", 2.0))
+        assert if_homed(homed, w) == 6.0 and if_homed(homeless, w) == 0.0
+
+    def test_built_wiring(self):
+        built = spec.named("measured_spill").build()
+        ex = built.executor
+        assert isinstance(ex.governor, StormBreaker)
+        assert isinstance(ex.governor.inner, AdaptiveSteal)
+        assert isinstance(ex.batch, BatchGovernor)
+        assert isinstance(built.control.router, CostRouter)
+        assert built.control.router.measured
+        assert ex.spec == spec.named("measured_spill")
+
+    def test_overrides_clear_embedded_spec(self):
+        s = spec.named("paper_cyclic")
+        assert s.build().executor.spec == s
+        assert s.build(governor=NoSteal()).executor.spec is None
+        assert s.build(steal_penalty=lambda t, w: 1.0).executor.spec is None
+
+
+class TestSpecReplayAcceptance:
+    def test_replay_without_executor_for_every_policy(self):
+        """Acceptance: for every registry policy, a recorded run replays
+        bit-identically from the v2 trace header alone."""
+        for name in spec.policy_names():
+            s = spec.named(name)
+            built = s.build()
+            rec = built.recorder
+            if rec is None:
+                rec = trace.TraceRecorder()
+                rec.attach(built.executor)
+            trace.drive(built.executor, _workload(s.num_domains))
+            t = trace.loads_lines(trace.dumps_lines(rec.finish()))
+            res = trace.replay(t, assert_match=True)
+            assert res.matches_recorded, name
+
+    def test_validate_specs_dir_passes(self):
+        from repro.spec.validate import iter_spec_files, main
+
+        assert len(iter_spec_files([SPECS_DIR])) == len(spec.policy_names())
+        assert main([SPECS_DIR]) == 0
+
+    def test_replay_does_not_reattach_recording(self):
+        """Header-only replay rebuilds the scheduler, never the recorded
+        run's own recorder (a replay is analysis, not another recording)."""
+        s = spec.RuntimeSpec(num_domains=2,
+                             trace=spec.TraceSpec(record=True))
+        built = s.build()
+        trace.drive(built.executor, _workload(2, steps=8))
+        t = trace.loads_lines(trace.dumps_lines(built.recorder.finish()))
+        res = trace.replay(t, assert_match=True)
+        assert res.executor.submit_hook is None
+
+    def test_streamed_segment_trace_replays_from_header(self, tmp_path):
+        """A spec that streams rotating segments still yields a trace whose
+        header alone reconstructs the run (no trace_path needed at replay)."""
+        s = spec.RuntimeSpec(
+            num_domains=2,
+            penalty=spec.PenaltySpec(kind="constant", value=3.0),
+            trace=spec.TraceSpec(record=True, segment_records=16))
+        built = s.build(trace_path=tmp_path / "segments")
+        trace.drive(built.executor, _workload(2, steps=8))
+        built.recorder.finish()
+        t = trace.TraceReader(tmp_path / "segments").read()
+        res = trace.replay(t, assert_match=True)
+        assert res.matches_recorded
+
+    def test_run_with_spec_rejects_domain_mismatch(self):
+        from benchmarks.run import run_with_spec
+
+        with pytest.raises(SystemExit, match="num_domains=2"):
+            run_with_spec(spec.named("controlled_serving"))
+
+    def test_stencil_sweep_rejects_spec_recording(self):
+        pytest.importorskip("jax")
+        import numpy as np
+        from repro.stencil.jacobi import run_runtime_sweep
+
+        f = np.zeros((20, 4, 4), dtype=np.float32)
+        bad = spec.RuntimeSpec(num_domains=4,
+                               trace=spec.TraceSpec(record=True))
+        with pytest.raises(spec.SpecError, match="trace="):
+            run_runtime_sweep(f, di=5, spec=bad)
+
+
+class TestServingSpec:
+    def test_engine_requires_serving_block(self):
+        with pytest.raises(spec.SpecError, match="serving"):
+            spec.named("paper_cyclic").build_engine(None, None)
+
+    def test_engine_rejects_domain_mismatch(self):
+        bad = dataclasses.replace(spec.named("controlled_serving"),
+                                  num_domains=3)
+        with pytest.raises(spec.SpecError, match="num_domains"):
+            bad.build_engine(None, None)
+
+    def test_engine_rejects_router_bypassed_by_policy(self):
+        # round_robin/single_queue submit with explicit domains, so a
+        # declared router would silently never run — must be rejected.
+        s = spec.named("controlled_serving")      # router.kind == "cost"
+        bad = dataclasses.replace(
+            s, serving=dataclasses.replace(s.serving, policy="round_robin"))
+        with pytest.raises(spec.SpecError, match="bypass"):
+            bad.build_engine(None, None)
+
+    def test_engine_rejects_conflicting_kwargs(self):
+        s = spec.named("controlled_serving")
+        with pytest.raises(spec.SpecError, match="batch"):
+            s.build_engine(None, None, batch=4)
+        # every spec-superseded raw kwarg is rejected, not silently ignored
+        with pytest.raises(spec.SpecError, match="num_replicas"):
+            s.build_engine(None, None, num_replicas=4)
+        with pytest.raises(spec.SpecError, match="max_seq"):
+            s.build_engine(None, None, max_seq=256)
+        with pytest.raises(spec.SpecError, match="policy"):
+            s.build_engine(None, None, policy="round_robin")
+        with pytest.raises(spec.SpecError, match="pool_cap"):
+            s.build_engine(None, None, pool_cap=16)
+
+    def test_spec_built_engine_schedule_matches_raw(self):
+        """The spec path wires the same executor the raw kwargs did: same
+        routing/steal schedule on the same submission stream (handlers are
+        irrelevant to the schedule, so no model is needed — submit plain
+        tasks straight to the inner executor)."""
+        def drive_exec(ex):
+            for i in range(24):
+                home = 0 if i % 4 else 1
+                ex.submit(ex.make_task(home=home, cost=float(4 + i % 5)))
+                ex.step()
+            ex.run_until_drained()
+            return ex.metrics.snapshot()
+
+        base = dataclasses.replace(
+            spec.named("controlled_serving"),
+            governor=spec.GovernorSpec(kind="greedy"),
+            router=spec.RouterSpec(kind="none"), batch=spec.BatchSpec())
+        raw = Executor(2, [0, 1], steal_order="longest",
+                       steal_penalty=spec.build_penalty(base.penalty),
+                       pool_cap=256, seed=0)
+        assert drive_exec(base.build().executor) == drive_exec(raw)

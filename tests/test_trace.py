@@ -1,6 +1,7 @@
 """repro.trace: workloads, trace round-trip, deterministic replay, storms,
 measured-penalty feedback."""
 import dataclasses
+import os
 
 import numpy as np
 import pytest
@@ -87,7 +88,9 @@ class TestTraceRoundTrip:
     def test_unknown_schema_rejected(self):
         t, _ = _recorded_run()
         lines = trace.dumps_lines(t)
-        bad = [lines[0].replace('"schema": 1', '"schema": 99')] + lines[1:]
+        tag = f'"schema": {trace.SCHEMA_VERSION}'
+        assert tag in lines[0]
+        bad = [lines[0].replace(tag, '"schema": 99')] + lines[1:]
         with pytest.raises(trace.TraceSchemaError):
             trace.loads_lines(bad)
 
@@ -409,3 +412,72 @@ class TestArrivalDataclasses:
         with pytest.raises(dataclasses.FrozenInstanceError):
             wl.name = "x"
         assert dataclasses.replace(wl, name="y").name == "y"
+
+
+class TestSchemaV2SpecHeaders:
+    """Schema v2: spec-built executors embed their full spec in the header;
+    v1 traces stay readable and keep their explicit-executor contract."""
+
+    V1_FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                              "v1_trace_fixture.jsonl")
+    # the fixture was recorded (by the PR-3-era writer) with this penalty:
+    V1_PENALTY = staticmethod(lambda task, worker: 2.0)
+
+    def _spec_run(self):
+        from repro import spec
+
+        s = spec.RuntimeSpec(
+            num_domains=4,
+            penalty=spec.PenaltySpec(kind="cost_factor", value=4.0),
+            trace=spec.TraceSpec(record=True))
+        built = s.build()
+        wl = trace.hot_skew(trace.poisson(rate=4, steps=16, num_domains=4,
+                                          seed=2), hot_domain=0, seed=2)
+        trace.drive(built.executor, wl)
+        return s, built.recorder.finish()
+
+    def test_header_embeds_spec_and_survives_jsonl(self):
+        from repro import spec
+
+        s, t = self._spec_run()
+        t2 = trace.loads_lines(trace.dumps_lines(t))
+        assert t2.spec_dict is not None
+        assert spec.RuntimeSpec.from_dict(t2.spec_dict) == s
+        assert t2.meta == t.meta          # JSON round-trip is lossless
+
+    def test_replay_with_no_executor_is_bit_identical(self):
+        _, t = self._spec_run()
+        t = trace.loads_lines(trace.dumps_lines(t))
+        res = trace.replay(t, assert_match=True)       # no factory at all
+        assert res.matches_recorded
+
+    def test_raw_kwarg_executor_writes_no_spec(self):
+        t, _ = _recorded_run()                         # Executor(...) direct
+        assert t.spec_dict is None
+        # and the default replay falls back to executor_from_meta: without
+        # the (unserialized) penalty fn the stats must NOT fully match.
+        res = trace.replay(t)
+        assert not res.matches_recorded
+        assert "steal_penalty" in res.mismatches()
+
+    def test_v1_fixture_still_reads_and_replays(self):
+        t = trace.TraceReader(self.V1_FIXTURE).read()
+        assert t.spec_dict is None
+        assert t.n_tasks == 29 and t.total_steps == 12
+        # v1 contract unchanged: an explicit executor (with the recorded
+        # penalty) reproduces the recorded stats exactly...
+        res = trace.replay(t, lambda tr: trace.executor_from_meta(
+            tr, steal_penalty=self.V1_PENALTY), assert_match=True)
+        assert res.matches_recorded
+        # ...while the no-argument default (meta fallback, penalty unknown)
+        # replays the schedule but cannot match the penalty account.
+        assert not trace.replay(t).matches_recorded
+
+    def test_written_traces_are_v2(self, tmp_path):
+        _, t = self._spec_run()
+        path = tmp_path / "v2.jsonl"
+        trace.TraceWriter(path).write(t)
+        import json
+        head = json.loads(open(path).readline())
+        assert head["schema"] == trace.SCHEMA_VERSION == 2
+        assert head["spec"]["spec_version"] == 1
