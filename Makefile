@@ -2,7 +2,7 @@
 # works without an editable install.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test smoke bench trace control spec
+.PHONY: test smoke bench trace control spec experiments
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -33,3 +33,13 @@ control:
 spec:
 	$(PY) -m repro.spec.validate specs
 	$(PY) examples/spec_policies.py
+
+# declarative-experiment gate: parse every checked-in
+# specs/experiments/*.json file, build + run its declared workload end to
+# end, and require header-only replay bit-identity (writes
+# BENCH_experiments.json; registry/golden equality is tier-1-tested), then
+# the experiment demo.  `repro.spec.validate` also accepts experiment files
+# for ad-hoc validation of uncommitted ones.
+experiments:
+	$(PY) -m benchmarks.run --experiment all
+	$(PY) examples/run_experiment.py

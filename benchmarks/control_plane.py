@@ -31,14 +31,17 @@ steal_penalty,storm_windows,mean_wait,mean_sojourn,improved,regressed
 ``main(json_path=...)`` (default ``BENCH_control.json`` as a script) also
 writes the machine-readable summary + controller state per scenario.
 
-Both arms are declarative ``repro.spec`` policies: the recorded baseline
-embeds its spec in the trace header (the determinism gate is a bare
-``replay(trace, assert_match=True)`` — the acceptance criterion that a v2
-trace alone reconstructs the recorded system), and the controlled arm is
-the registry policy ``controlled_replay``.  ``main(spec=...)`` substitutes
-any spec as the controlled arm (``benchmarks.run --spec/--policy``;
-``gates=False`` then skips the controlled-must-win assertions, since an
-arbitrary policy makes no such promise).
+Both arms are declarative ``repro.spec`` policies and every scenario's
+workload is the declarative block of the ``control_*`` named experiments
+(``repro.spec.control_workloads``): this module is a thin driver that owns
+no workload construction.  The recorded baseline embeds its spec in the
+trace header (the determinism gate is a bare ``replay(trace,
+assert_match=True)`` — the acceptance criterion that a v2 trace alone
+reconstructs the recorded system), and the controlled arm is the registry
+policy ``controlled_replay``.  ``main(spec=...)`` substitutes any spec as
+the controlled arm (``benchmarks.run --spec/--policy``; ``gates=False``
+then skips the controlled-must-win assertions, since an arbitrary policy
+makes no such promise).
 """
 from __future__ import annotations
 
@@ -54,34 +57,23 @@ STORM_WIDTH = 8
 SCENARIOS = ("bursty", "diurnal", "hot_skew")
 
 
-def _scenarios(steps: int, seed: int):
-    from repro.trace import lognormal_costs, standard_scenarios
+def _experiments(steps: int, seed: int):
+    """scenario -> recording experiment: the ``control_*`` workload block
+    under the shared ``replay_baseline`` recording policy (the same
+    baseline ``benchmarks.trace_replay`` records under)."""
+    from repro import spec as rspec
 
-    base = standard_scenarios(NUM_DOMAINS, steps, seed)
-    return {name: lognormal_costs(base[name], median=COST_MEDIAN,
-                                  sigma=COST_SIGMA, seed=seed + i)
-            for i, name in enumerate(SCENARIOS)}
-
-
-def _base_spec(seed: int):
-    """The uncontrolled recording configuration: the shared registry
-    ``replay_baseline`` policy (also used by ``benchmarks.trace_replay``),
-    re-seeded."""
-    from repro import spec
-
-    base = dataclasses.replace(spec.named("replay_baseline"), seed=seed)
+    base = dataclasses.replace(rspec.named("replay_baseline"), seed=seed)
     assert (base.num_domains == NUM_DOMAINS
             and base.penalty.value == STEAL_PENALTY), \
         "benchmark constants drifted from the replay_baseline registry policy"
-    return base
-
-
-def _record_baseline(workload, seed: int):
-    from repro.trace import drive
-
-    built = _base_spec(seed).build()
-    drive(built.executor, workload)
-    return built.recorder.finish()
+    workloads = rspec.control_workloads(steps=steps, seed=seed)
+    assert tuple(workloads) == SCENARIOS and all(
+        wl.costs.median == COST_MEDIAN and wl.costs.sigma == COST_SIGMA
+        for wl in workloads.values()), \
+        "benchmark constants drifted from the control_* experiments"
+    return {name: rspec.ExperimentSpec(policy=base, workload=wl)
+            for name, wl in workloads.items()}
 
 
 def _controlled_factory(spec):
@@ -131,8 +123,8 @@ def main(steps: int = 48, seed: int = 0,
              "improved,regressed"]
     results: dict[str, dict] = {}
     storms_reduced = 0
-    for scen, workload in _scenarios(steps, seed).items():
-        trace = _record_baseline(workload, seed)
+    for scen, exp in _experiments(steps, seed).items():
+        trace = exp.run().primary.trace
 
         # determinism gate first — and the spec acceptance criterion: the
         # v2 header alone (no executor argument, no factory) reconstructs

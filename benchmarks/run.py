@@ -3,6 +3,8 @@
     PYTHONPATH=src python -m benchmarks.run [--full]
     PYTHONPATH=src python -m benchmarks.run --spec path/to/policy.json
     PYTHONPATH=src python -m benchmarks.run --policy controlled_replay
+    PYTHONPATH=src python -m benchmarks.run --experiment replay_hot_skew
+    PYTHONPATH=src python -m benchmarks.run --experiment all
 
 Prints ``name,us_per_call,derived`` CSV summary lines plus each benchmark's
 own CSV block.  ``--full`` uses the paper's full 14400-task grid and 100
@@ -14,9 +16,19 @@ samples (slow; the recorded numbers live in EXPERIMENTS.md).
 built-in policy grids: any scheduling configuration can be benchmarked
 without a code edit.  The control-plane win gates are skipped in this mode
 (an arbitrary policy makes no controlled-must-win promise).
+
+``--experiment NAME|FILE|all`` executes complete declarative experiments
+(``repro.spec.ExperimentSpec``: policy + workload + seeds in one JSON
+block) end to end — build, drive the declared workload, record, and
+header-only replay-conformance check.  ``all`` runs every checked-in
+``specs/experiments/*.json`` golden file (the registry outside a repo
+checkout) and refreshes the machine-readable ``BENCH_experiments.json``
+artifact; single-name/file runs leave the committed artifact untouched.
 """
 from __future__ import annotations
 
+import glob
+import os
 import sys
 import time
 
@@ -28,7 +40,11 @@ def _block(title: str, lines: list[str]) -> None:
 
 
 def _cli_spec(argv: list[str]):
-    """The ``RuntimeSpec`` named by --spec FILE / --policy NAME, or None."""
+    """The ``RuntimeSpec`` named by --spec FILE / --policy NAME, or None.
+
+    Unknown names/paths exit with the available registry names instead of
+    leaking a traceback.
+    """
     from repro import spec as rspec
 
     for flag, resolve in (("--spec", rspec.load), ("--policy", rspec.named)):
@@ -36,8 +52,121 @@ def _cli_spec(argv: list[str]):
             i = argv.index(flag)
             if i + 1 >= len(argv):
                 raise SystemExit(f"{flag} needs an argument")
-            return resolve(argv[i + 1])
+            arg = argv[i + 1]
+            try:
+                return resolve(arg)
+            except (rspec.SpecError, OSError) as e:
+                raise SystemExit(
+                    f"{flag} {arg!r}: {e}\navailable registry policies: "
+                    f"{', '.join(rspec.policy_names())}") from None
     return None
+
+
+def _cli_experiments(argv: list[str]):
+    """``(name -> ExperimentSpec, is_full_set)`` for --experiment
+    NAME|FILE|all, or None when the flag is absent.  ``is_full_set`` is the
+    single source of truth for whether this run may refresh the committed
+    ``BENCH_experiments.json`` artifact."""
+    from repro import spec as rspec
+
+    if "--experiment" not in argv:
+        return None
+    i = argv.index("--experiment")
+    if i + 1 >= len(argv):
+        raise SystemExit("--experiment needs an argument (a registered "
+                         "experiment name, a JSON file, or 'all')")
+    arg = argv[i + 1]
+    if arg == "all":
+        # prefer the checked-in golden files (so the CI gate parses, runs,
+        # and replay-checks exactly what is committed); fall back to the
+        # in-code registry outside a repo checkout
+        exp_dir = os.path.join("specs", "experiments")
+        if os.path.isdir(exp_dir):
+            files = sorted(glob.glob(os.path.join(exp_dir, "*.json")))
+            if not files:
+                raise SystemExit(f"--experiment all: {exp_dir}/ exists but "
+                                 "holds no *.json experiment files — the "
+                                 "gate would validate nothing")
+            out = {}
+            for path in files:
+                try:
+                    out[os.path.splitext(os.path.basename(path))[0]] = \
+                        rspec.load_experiment(path)
+                except rspec.SpecError as e:
+                    raise SystemExit(f"--experiment all: {path}: {e}") \
+                        from None
+            return out, True
+        return {name: rspec.experiment(name)
+                for name in rspec.experiment_names()}, True
+    if arg.endswith(".json") or os.path.exists(arg):
+        try:
+            return {os.path.splitext(os.path.basename(arg))[0]:
+                    rspec.load_experiment(arg)}, False
+        except (rspec.SpecError, OSError) as e:
+            raise SystemExit(f"--experiment {arg!r}: {e}") from None
+    try:
+        return {arg: rspec.experiment(arg)}, False
+    except rspec.SpecError:
+        raise SystemExit(
+            f"--experiment: unknown experiment {arg!r}\navailable registry "
+            f"experiments: {', '.join(rspec.experiment_names())}\n"
+            "(or pass a JSON file path, or 'all')") from None
+
+
+def run_experiments(experiments: dict,
+                    json_path: str | None = None) -> list[str]:
+    """Execute declarative experiments end to end.
+
+    Per experiment and repeat: build the declared system, drive the
+    declared workload while recording, then assert the recorded trace
+    replays bit-identically from its own header (the conformance gate).
+    Returns CSV lines; writes the machine-readable summary to
+    ``json_path``.
+
+    CSV: experiment,repeat,tasks,steps,throughput,local_frac,steal_frac,
+    steal_penalty,idle_polls,replay_exact
+    """
+    import json
+
+    from repro.trace import dumps_lines, loads_lines, replay
+
+    lines = ["experiment,repeat,tasks,steps,throughput,local_frac,"
+             "steal_frac,steal_penalty,idle_polls,replay_exact"]
+    results: dict[str, dict] = {}
+    diverged: list[str] = []
+    for name, exp in experiments.items():
+        result = exp.run()
+        runs = []
+        for r, run in enumerate(result.runs):
+            # conformance check: through the JSONL wire format, the header
+            # alone must reconstruct the recorded system bit-for-bit.  The
+            # measured outcome is reported per run; any divergence fails
+            # the whole command *after* the artifact is written, so the
+            # CSV/JSON always carry honest values.
+            rep = replay(loads_lines(dumps_lines(run.trace)))
+            if not rep.matches_recorded:
+                diverged.append(f"{name} repeat {r}: {rep.mismatches()}")
+            s = run.stats
+            steps = run.executor.step_count
+            lines.append(
+                f"{name},{r},{s['executed']:.0f},{steps},"
+                f"{s['executed'] / max(steps, 1):.4f},"
+                f"{s['local_fraction']:.3f},{s['steal_fraction']:.3f},"
+                f"{s['steal_penalty']:.0f},{s['idle_polls']:.0f},"
+                f"{int(rep.matches_recorded)}")
+            runs.append({"seed": run.seed, "steps": steps,
+                         "replay_exact": rep.matches_recorded, **s})
+        results[name] = {"experiment": exp.to_dict(), "runs": runs}
+    if json_path:
+        with open(json_path, "w", encoding="utf-8") as fh:
+            json.dump({"bench": "experiments", "results": results},
+                      fh, indent=2)
+            fh.write("\n")
+    if diverged:
+        raise SystemExit("replay-conformance failure — header-only replay "
+                         "diverged from recorded stats:\n  "
+                         + "\n  ".join(diverged))
+    return lines
 
 
 def run_with_spec(spec, full: bool = False) -> None:
@@ -65,6 +194,17 @@ def run_with_spec(spec, full: bool = False) -> None:
 
 def main() -> None:
     full = "--full" in sys.argv
+    cli_experiments = _cli_experiments(sys.argv[1:])
+    if cli_experiments is not None:
+        # only the full `all` gate refreshes the committed artifact; a
+        # single-experiment run must not clobber it with partial data
+        experiments, full_set = cli_experiments
+        json_path = "BENCH_experiments.json" if full_set else None
+        lines = run_experiments(experiments, json_path=json_path)
+        _block("Declarative experiments (policy + workload + seeds)", lines)
+        print("\n# experiment run complete"
+              + (" (BENCH_experiments.json written)" if json_path else ""))
+        return
     spec = _cli_spec(sys.argv[1:])
     if spec is not None:
         run_with_spec(spec, full=full)

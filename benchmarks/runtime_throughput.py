@@ -35,9 +35,12 @@ round, the discrete makespan-normalized rate).
 
 Every policy is a named ``repro.spec.RuntimeSpec`` from the registry
 (static → ``static_local``, tasking → ``tasking_round_robin``, locality →
-``paper_cyclic``, adaptive → ``adaptive_theta``); ``main(spec=...)``
-replaces the whole grid with one externally supplied spec — the
-``benchmarks.run --spec/--policy`` path.
+``paper_cyclic``, adaptive → ``adaptive_theta``) and every scenario is a
+declarative ``repro.spec.WorkloadSpec`` (``spec.runtime_workloads`` — the
+workload block of the ``runtime_*`` named experiments), so this module is
+a thin driver: it owns no workload construction, only the policy × workload
+grid.  ``main(spec=...)`` replaces the whole grid with one externally
+supplied spec — the ``benchmarks.run --spec/--policy`` path.
 """
 from __future__ import annotations
 
@@ -45,35 +48,17 @@ import dataclasses
 import json
 import sys
 
-import numpy as np
-
 NUM_DOMAINS = 4
 STEAL_PENALTY = 4.0           # cost units per stolen task (local cost = 1)
 
 
 def _scenarios(n_tasks: int, seed: int):
-    """name -> list of per-round arrival batches, each a list of home tags
-    (an empty batch is an idle round)."""
-    rng = np.random.default_rng(seed)
+    """name -> built ``trace.workloads.Workload`` (the declared arrival
+    streams of the ``runtime_*`` experiment registry)."""
+    from repro.spec import runtime_workloads
 
-    def uniform():
-        homes = rng.integers(0, NUM_DOMAINS, n_tasks)
-        return [list(homes[i:i + 8]) for i in range(0, n_tasks, 8)]
-
-    def bursty():
-        homes = rng.integers(0, NUM_DOMAINS, n_tasks)
-        waves = []
-        for i in range(0, n_tasks, 64):
-            waves.append(list(homes[i:i + 64]))
-            waves.extend([[]] * 6)           # idle rounds between bursts
-        return waves
-
-    def skewed():
-        hot = rng.random(n_tasks) < 0.8
-        homes = np.where(hot, 0, rng.integers(0, NUM_DOMAINS, n_tasks))
-        return [list(homes[i:i + 8]) for i in range(0, n_tasks, 8)]
-
-    return {"uniform": uniform(), "bursty": bursty(), "skewed": skewed()}
+    return {name: wl.build() for name, wl in runtime_workloads(
+        n_tasks=n_tasks, num_domains=NUM_DOMAINS, seed=seed).items()}
 
 
 def _policies():
@@ -88,15 +73,12 @@ def _policies():
     }
 
 
-def _drive(waves, policy_spec, seed: int):
+def _drive(workload, policy_spec, seed: int):
+    from repro.trace import drive
+
     ex = dataclasses.replace(policy_spec, seed=seed,
                              record_events=False).build().executor
-    for batch in waves:
-        for home in batch:
-            ex.submit(ex.make_task(home=int(home)))
-        ex.step()
-    ex.run_until_drained()
-    return ex
+    return drive(ex, workload)
 
 
 def to_json(lines: list[str]) -> dict:
@@ -121,9 +103,9 @@ def main(n_tasks: int = 400, seed: int = 0,
     policies = {"spec": spec} if spec is not None else _policies()
     lines = ["scenario,policy,tasks,local_frac,steal_frac,steal_penalty,"
              "idle_polls,steps"]
-    for scen_name, waves in _scenarios(n_tasks, seed).items():
+    for scen_name, workload in _scenarios(n_tasks, seed).items():
         for pol_name, policy_spec in policies.items():
-            ex = _drive(waves, policy_spec, seed)
+            ex = _drive(workload, policy_spec, seed)
             s = ex.stats
             assert s.executed == n_tasks, (scen_name, pol_name, s.executed)
             lines.append(
@@ -139,7 +121,9 @@ def main(n_tasks: int = 400, seed: int = 0,
 
 
 if __name__ == "__main__":
+    # the --fast smoke must not overwrite the committed full-grid
+    # BENCH_runtime.json artifact with small-run numbers
     fast = "--fast" in sys.argv
     for ln in main(n_tasks=160 if fast else 400,
-                   json_path="BENCH_runtime.json"):
+                   json_path=None if fast else "BENCH_runtime.json"):
         print(ln)

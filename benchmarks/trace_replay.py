@@ -25,12 +25,16 @@ in unit-cost tasks (θ = penalty / 1), while ``MeasuredPenalty`` learns the
 real ~2.6 mean local cost and lands on a correspondingly lower θ — same
 penalty, different (correct) depth threshold.
 
-The recorded baseline and every replay arm are built from
-``repro.spec.RuntimeSpec`` values (the baseline spec rides in the trace
-header, so the determinism gate is a bare ``replay(trace,
-assert_match=True)`` — no hand-written factory).  ``main(spec=...)``
-replaces the governor grid with one externally supplied spec
-(``benchmarks.run --spec/--policy``).
+Both the scenarios and the recorded baseline are the ``replay_*`` named
+experiments (``repro.spec.replay_experiments``): this module is a thin
+driver that runs each experiment to record its trace, then replays the
+governor grid against it.  Every replay arm — including the measured one,
+whose learned θ inputs ride in a declarative ``GovernorStateSpec``
+snapshot — is a pure spec edit of the experiment's policy (the baseline
+spec rides in the trace header, so the determinism gate is a bare
+``replay(trace, assert_match=True)`` — no hand-written factory).
+``main(spec=...)`` replaces the governor grid with one externally supplied
+spec (``benchmarks.run --spec/--policy``).
 
 CSV: scenario,governor,tasks,local_frac,steal_frac,steal_penalty,idle_polls,steps,theta
 """
@@ -45,55 +49,42 @@ COST_MEDIAN = 2.0        # lognormal service-cost median (sigma below)
 COST_SIGMA = 0.75
 
 
-def _base_spec(seed: int):
-    """The greedy-baseline recording configuration: the single registry
-    definition (``replay_baseline``) both replay benchmarks record under,
-    re-seeded (recorded into the trace header, so replay needs no factory)."""
-    from repro import spec
+def _experiments(steps: int, seed: int):
+    """scenario -> the ``replay_*`` named experiment, re-parameterized
+    (workload + recording policy in one declarative block)."""
+    from repro.spec import replay_experiments
 
-    base = dataclasses.replace(spec.named("replay_baseline"), seed=seed)
-    assert (base.num_domains == NUM_DOMAINS
-            and base.penalty.value == STEAL_PENALTY), \
-        "benchmark constants drifted from the replay_baseline registry policy"
-    return base
-
-
-def _record_baseline(workload, seed: int):
-    from repro.trace import drive
-
-    built = _base_spec(seed).build()
-    drive(built.executor, workload)
-    return built.recorder.finish()
+    exps = replay_experiments(steps=steps, seed=seed)
+    for exp in exps.values():
+        assert (exp.policy.num_domains == NUM_DOMAINS
+                and exp.policy.penalty.value == STEAL_PENALTY
+                and exp.workload.costs.median == COST_MEDIAN
+                and exp.workload.costs.sigma == COST_SIGMA), \
+            "benchmark constants drifted from the replay_* experiments"
+    return exps
 
 
-def _arms(trace, seed: int):
-    """Replay arm -> spec.  Three arms are pure spec edits of the baseline;
-    the measured arm overrides the governor with an *instance* seeded from
-    the recorded service times (``MeasuredPenalty.from_trace`` state is
-    data-derived, not configuration)."""
-    from repro.spec import GovernorSpec, TraceSpec
+def _arms(trace, base):
+    """Replay arm -> spec: pure edits of the experiment's policy.  The
+    measured arm seeds its governor from the recorded service times
+    (``MeasuredPenalty.from_trace``), snapshotted into a declarative
+    ``GovernorStateSpec`` — data-derived state, serialized as spec."""
+    from repro.spec import GovernorSpec, GovernorStateSpec, TraceSpec
     from repro.trace import MeasuredPenalty
 
-    base = dataclasses.replace(_base_spec(seed), trace=TraceSpec())
+    base = dataclasses.replace(base, trace=TraceSpec())
 
     def gov(**kw):
         return dataclasses.replace(base, governor=GovernorSpec(**kw))
 
+    measured = GovernorStateSpec.from_governor(
+        MeasuredPenalty.from_trace(trace))
     return {
-        "static": (gov(kind="none"), None),
-        "greedy": (base, None),
-        "adaptive": (gov(kind="adaptive", penalty_hint=STEAL_PENALTY), None),
-        "measured": (base, MeasuredPenalty.from_trace(trace)),
+        "static": gov(kind="none"),
+        "greedy": base,
+        "adaptive": gov(kind="adaptive", penalty_hint=STEAL_PENALTY),
+        "measured": gov(kind="measured", state=measured),
     }
-
-
-def _scenarios(steps: int, seed: int):
-    from repro.trace import lognormal_costs, standard_scenarios
-
-    return {name: lognormal_costs(wl, median=COST_MEDIAN, sigma=COST_SIGMA,
-                                  seed=seed + i)
-            for i, (name, wl) in enumerate(
-                standard_scenarios(NUM_DOMAINS, steps, seed).items())}
 
 
 def main(steps: int = 48, seed: int = 0, spec=None) -> list[str]:
@@ -101,8 +92,8 @@ def main(steps: int = 48, seed: int = 0, spec=None) -> list[str]:
 
     lines = ["scenario,governor,tasks,local_frac,steal_frac,steal_penalty,"
              "idle_polls,steps,theta"]
-    for scen, workload in _scenarios(steps, seed).items():
-        trace = _record_baseline(workload, seed)
+    for scen, exp in _experiments(steps, seed).items():
+        trace = exp.run().primary.trace
 
         # determinism gate: the header-embedded spec must reproduce the
         # recorded stats bit-for-bit before any A/B is meaningful.
@@ -111,12 +102,11 @@ def main(steps: int = 48, seed: int = 0, spec=None) -> list[str]:
         assert base.stats == again.stats, f"replay nondeterministic on {scen}"
 
         if spec is not None:
-            arms = {"spec": (dataclasses.replace(spec, seed=seed), None)}
+            arms = {"spec": dataclasses.replace(spec, seed=seed)}
         else:
-            arms = _arms(trace, seed)
-        for name, (arm_spec, gov_override) in arms.items():
-            res = replay(trace, lambda tr: arm_spec.build(
-                governor=gov_override).executor)
+            arms = _arms(trace, exp.policy)
+        for name, arm_spec in arms.items():
+            res = replay(trace, lambda tr: arm_spec.build().executor)
             s = res.executor.stats
             assert s.executed == trace.n_tasks, (scen, name, s.executed)
             gov = res.executor.governor

@@ -85,6 +85,20 @@ class ControlLoop:
             raise RuntimeError("ControlLoop is not attached to an executor")
         return self._ex
 
+    def governor_state(self):
+        """Export the attached executor's learned governor θ state as a
+        serializable ``repro.spec.GovernorStateSpec`` (the breaker
+        decoration is unwrapped), or None when the effective governor
+        carries no learned state (greedy/none kinds).  The declarative
+        checkpoint surface for *controlled* systems — pair with
+        ``repro.spec.checkpoint(executor)`` for the full spec."""
+        from ..spec import GovernorStateSpec, SpecError  # lazy: spec↔control
+
+        try:
+            return GovernorStateSpec.from_governor(self.executor.governor)
+        except SpecError:
+            return None
+
     def snapshot(self) -> dict[str, float]:
         """Controller state for logging/benchmark JSON."""
         out: dict[str, float] = {}

@@ -37,16 +37,29 @@ Raw constructor kwargs on ``Executor``/``ServingEngine`` remain as a thin
 deprecated path for callables and tests; new configurations should be
 specs (a JSON file, not a code change).
 """
-from .build import Built, build, build_governor, build_penalty
+from .build import Built, build, build_governor, build_penalty, checkpoint
+from .experiments import (EXPERIMENT_VERSION, CostsSpec, ExperimentResult,
+                          ExperimentSpec, RunResult, SkewSpec, WorkloadSpec,
+                          control_experiments, control_workloads,
+                          dump_experiment, experiment, experiment_names,
+                          load_experiment, replay_experiments,
+                          replay_workloads, runtime_experiments,
+                          runtime_workloads, standard_workloads)
 from .model import (SPEC_VERSION, BatchSpec, BreakerSpec, GovernorSpec,
-                    PenaltySpec, RouterSpec, RuntimeSpec, ServingSpec,
-                    SpecError, TraceSpec, dump, load)
+                    GovernorStateSpec, PenaltySpec, RouterSpec, RuntimeSpec,
+                    ServingSpec, SpecError, TraceSpec, dump, load)
 from .registry import named, policy_names
 
 __all__ = [
-    "Built", "build", "build_governor", "build_penalty",
+    "Built", "build", "build_governor", "build_penalty", "checkpoint",
+    "EXPERIMENT_VERSION", "CostsSpec", "ExperimentResult", "ExperimentSpec",
+    "RunResult", "SkewSpec", "WorkloadSpec",
+    "control_experiments", "control_workloads", "dump_experiment",
+    "experiment", "experiment_names", "load_experiment",
+    "replay_experiments", "replay_workloads", "runtime_experiments",
+    "runtime_workloads", "standard_workloads",
     "SPEC_VERSION", "BatchSpec", "BreakerSpec", "GovernorSpec",
-    "PenaltySpec", "RouterSpec", "RuntimeSpec", "ServingSpec",
-    "SpecError", "TraceSpec", "dump", "load",
+    "GovernorStateSpec", "PenaltySpec", "RouterSpec", "RuntimeSpec",
+    "ServingSpec", "SpecError", "TraceSpec", "dump", "load",
     "named", "policy_names",
 ]

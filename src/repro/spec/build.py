@@ -68,7 +68,13 @@ def build_penalty(spec: PenaltySpec) -> Optional[Callable[[Task, Worker], float]
 
 
 def build_governor(spec: GovernorSpec) -> StealGovernor:
-    """The *inner* governor (breaker decoration is applied by ``build``)."""
+    """The *inner* governor (breaker decoration is applied by ``build``).
+
+    A declared ``GovernorStateSpec`` supersedes the ``penalty_hint``/
+    ``task_cost`` priors: the governor starts at the snapshotted learned
+    estimates (checkpoint/restore), with the spec's ``ema``/
+    ``max_threshold`` hyper-parameters unchanged.
+    """
     if spec.kind == "greedy":
         return GreedySteal()
     if spec.kind == "none":
@@ -78,8 +84,36 @@ def build_governor(spec: GovernorSpec) -> StealGovernor:
         cls = MeasuredPenalty
     else:
         cls = AdaptiveSteal
-    return cls(penalty_hint=spec.penalty_hint, task_cost=spec.task_cost,
-               ema=spec.ema, max_threshold=spec.max_threshold)
+    st = spec.state
+    gov = cls(penalty_hint=spec.penalty_hint if st is None
+              else st.penalty_estimate,
+              task_cost=spec.task_cost if st is None else st.task_cost,
+              ema=spec.ema, max_threshold=spec.max_threshold)
+    if st is not None and spec.kind == "measured":
+        gov.observed_local = st.observed_local
+        gov.observed_steals = st.observed_steals
+    return gov
+
+
+def checkpoint(executor: Executor) -> RuntimeSpec:
+    """Snapshot a running spec-built system back into a ``RuntimeSpec``.
+
+    Returns the executor's own spec with the governor's learned θ state
+    folded in as a ``GovernorStateSpec`` — the declarative mid-run
+    checkpoint: serialize it, and ``build()`` elsewhere reconstructs the
+    exact estimator without re-reading any trace.  Requires a spec-built
+    executor (``executor.spec`` set) whose governor carries learned state
+    (adaptive/measured kinds).
+    """
+    from .model import GovernorStateSpec
+    spec = getattr(executor, "spec", None)
+    if spec is None:
+        raise SpecError(
+            "checkpoint needs a spec-built executor (executor.spec is None: "
+            "raw-kwarg construction or a build-time override)")
+    state = GovernorStateSpec.from_governor(executor.governor)
+    return dataclasses.replace(
+        spec, governor=dataclasses.replace(spec.governor, state=state))
 
 
 def _needs_control(spec: RuntimeSpec) -> bool:
@@ -91,8 +125,14 @@ def _needs_control(spec: RuntimeSpec) -> bool:
 def build(spec: RuntimeSpec, *,
           handler=None, batch_handler=None,
           steal_penalty=None, governor: StealGovernor | None = None,
-          trace_path=None) -> Built:
-    """Construct the system ``spec`` declares (see module docstring)."""
+          trace_path=None, experiment=None) -> Built:
+    """Construct the system ``spec`` declares (see module docstring).
+
+    ``experiment`` (an ``ExperimentSpec``, when built through
+    ``repro.spec.experiments``) is stamped onto the executor alongside the
+    spec, so recorded trace headers name the whole experiment, not just the
+    policy.
+    """
     overridden = steal_penalty is not None or governor is not None
     if steal_penalty is None:
         steal_penalty = build_penalty(spec.penalty)
@@ -143,9 +183,11 @@ def build(spec: RuntimeSpec, *,
     if spec.router.kind == "round_robin":
         ex.router = lambda task: ex.next_round_robin()
 
-    # Stamp the spec so trace headers fully name this system — unless a
-    # build-time override made the spec an incomplete description.
+    # Stamp the spec (and any owning experiment) so trace headers fully
+    # name this system — unless a build-time override made the spec an
+    # incomplete description.
     ex.spec = None if overridden else spec
+    ex.experiment = None if overridden else experiment
 
     recorder = None
     if spec.trace.record:

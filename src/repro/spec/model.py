@@ -159,6 +159,68 @@ class BreakerSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class GovernorStateSpec:
+    """A snapshot of an adaptive governor's *learned* θ inputs.
+
+    ``runtime.AdaptiveSteal`` / ``trace.MeasuredPenalty`` learn the steal
+    penalty (θ's numerator) and — for the measured governor — the local
+    service time (θ's denominator) while the system runs.  This block
+    serializes that learned state, so a mid-run checkpoint rebuilds the
+    exact estimator declaratively: ``GovernorSpec(state=...)`` constructs
+    the governor at the snapshotted estimates instead of the static priors,
+    and no trace has to be re-read (``MeasuredPenalty.from_trace``'s job,
+    done once and then persisted as spec data).
+
+    Capture with ``GovernorStateSpec.from_governor(gov)`` (a breaker
+    decoration is unwrapped) or ``repro.spec.checkpoint(executor)``.
+    Per-worker idle-decay counters are transient scheduling state, not
+    estimator state, and are deliberately not snapshotted.
+    """
+
+    penalty_estimate: float = 0.0
+    task_cost: float = 1.0
+    observed_local: int = 0
+    observed_steals: int = 0
+
+    def __post_init__(self):
+        _require(self.penalty_estimate >= 0.0,
+                 "governor.state.penalty_estimate must be >= 0")
+        _require(self.task_cost > 0,
+                 "governor.state.task_cost must be positive")
+        _require(self.observed_local >= 0 and self.observed_steals >= 0,
+                 "governor.state observation counts must be >= 0")
+
+    @classmethod
+    def from_governor(cls, governor) -> "GovernorStateSpec":
+        """Snapshot a live governor's learned estimates (unwrapping a
+        ``control.StormBreaker`` decoration to its inner governor)."""
+        inner = getattr(governor, "inner", None)
+        if inner is not None:
+            governor = inner
+        if not hasattr(governor, "penalty_estimate"):
+            raise SpecError(
+                f"governor {type(governor).__name__} carries no learned "
+                "state to snapshot (only adaptive/measured governors do)")
+        return cls(penalty_estimate=float(governor.penalty_estimate),
+                   task_cost=float(governor.task_cost),
+                   observed_local=int(getattr(governor, "observed_local", 0)),
+                   observed_steals=int(getattr(governor,
+                                               "observed_steals", 0)))
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"penalty_estimate": self.penalty_estimate,
+                "task_cost": self.task_cost,
+                "observed_local": self.observed_local,
+                "observed_steals": self.observed_steals}
+
+    @classmethod
+    def from_dict(cls, d: dict,
+                  where: str = "governor.state") -> "GovernorStateSpec":
+        _reject_unknown(cls, d, where)
+        return _construct(cls, _coerce_scalars(cls, d, where), where)
+
+
+@dataclasses.dataclass(frozen=True)
 class GovernorSpec:
     """Steal-governor choice + hyper-parameters, plus breaker decoration.
 
@@ -173,6 +235,11 @@ class GovernorSpec:
     ``breaker`` wraps the built governor in a ``control.StormBreaker``
     (installed via ``ControlLoop``, so the storm detector runs on the
     executor's step hook).
+
+    ``state`` (adaptive/measured only) seeds the governor's learned θ
+    inputs from a ``GovernorStateSpec`` snapshot; it supersedes the
+    ``penalty_hint``/``task_cost`` priors, which remain purely declarative
+    configuration.
     """
 
     KINDS = ("greedy", "none", "adaptive", "measured")
@@ -183,19 +250,25 @@ class GovernorSpec:
     ema: float = 0.2
     max_threshold: int = 64
     breaker: Optional[BreakerSpec] = None
+    state: Optional[GovernorStateSpec] = None
 
     def __post_init__(self):
         _require(self.kind in self.KINDS,
                  f"governor.kind {self.kind!r} not in {self.KINDS}")
         _require(0.0 < self.ema <= 1.0, "governor.ema must be in (0, 1]")
         _require(self.task_cost > 0, "governor.task_cost must be positive")
+        _require(self.state is None or self.kind in ("adaptive", "measured"),
+                 f"governor.state requires an adaptive/measured kind, "
+                 f"not {self.kind!r} (nothing to restore)")
 
     def to_dict(self) -> dict[str, Any]:
         return {"kind": self.kind, "penalty_hint": self.penalty_hint,
                 "task_cost": self.task_cost, "ema": self.ema,
                 "max_threshold": self.max_threshold,
                 "breaker": None if self.breaker is None
-                else self.breaker.to_dict()}
+                else self.breaker.to_dict(),
+                "state": None if self.state is None
+                else self.state.to_dict()}
 
     @classmethod
     def from_dict(cls, d: dict, where: str = "governor") -> "GovernorSpec":
@@ -204,6 +277,9 @@ class GovernorSpec:
         br = kw.pop("breaker", None)
         kw["breaker"] = (None if br is None
                          else BreakerSpec.from_dict(br, f"{where}.breaker"))
+        st = kw.pop("state", None)
+        kw["state"] = (None if st is None
+                       else GovernorStateSpec.from_dict(st, f"{where}.state"))
         return _construct(cls, kw, where)
 
 

@@ -1,6 +1,6 @@
 """Validate checked-in spec files: parse, build, drive, replay.
 
-    PYTHONPATH=src python -m repro.spec.validate specs [more.json ...]
+    PYTHONPATH=src python -m repro.spec.validate specs [specs/experiments ...]
 
 For every ``*.json`` under the given paths (directories are globbed,
 files taken as-is) this:
@@ -14,16 +14,24 @@ files taken as-is) this:
      alone* (``replay(trace)``, no executor argument), asserting the
      replayed ``RuntimeStats`` are bit-identical to the recorded ones.
 
+*Experiment* files (``repro.spec.ExperimentSpec``: a ``workload`` block
+next to the ``policy``, e.g. ``specs/experiments/*.json``) are detected by
+shape and validated end to end instead: parse strictly, round-trip
+exactly, then ``run()`` the *declared* workload (all repeats) and assert
+every recorded trace replays bit-identically from its own header.
+
 Exit code 0 means every file names a buildable, exactly-reproducible
-system — the CI gate behind ``make spec``.
+system — the CI gate behind ``make spec`` / ``make experiments``.
 """
 from __future__ import annotations
 
 import glob
+import json
 import os
 import sys
 
-from .model import RuntimeSpec, SpecError, load
+from .experiments import ExperimentSpec
+from .model import RuntimeSpec, SpecError
 
 
 def validate_spec(spec: RuntimeSpec) -> dict[str, float]:
@@ -57,6 +65,49 @@ def validate_spec(spec: RuntimeSpec) -> dict[str, float]:
     return trace.stats
 
 
+def validate_experiment(exp: ExperimentSpec) -> dict[str, float]:
+    """Round-trip + run + header-only replay for one experiment spec.
+
+    Unlike ``validate_spec`` (which drives a synthetic probe workload),
+    this runs the experiment's *declared* workload — the whole point of an
+    experiment file — and checks every repeat's trace replays
+    bit-identically through the JSONL wire format.  Returns the first
+    repeat's recorded stats.
+    """
+    from ..trace import dumps_lines, loads_lines, replay
+
+    if exp.from_json(exp.to_json()) != exp:
+        raise SpecError("canonical round-trip changed the experiment")
+    result = exp.run()
+    for run in result.runs:
+        trace = loads_lines(dumps_lines(run.trace))
+        if trace.meta.get("spec") is None:
+            raise SpecError("experiment executor did not embed its spec in "
+                            "the trace header")
+        if trace.meta.get("experiment") is None:
+            raise SpecError("experiment executor did not embed the "
+                            "experiment in the trace header")
+        replay(trace, assert_match=True)         # header-only reconstruction
+    return result.primary.trace.stats
+
+
+def validate_file(path) -> tuple[str, dict[str, float]]:
+    """Validate one JSON file, dispatching on shape: a ``workload`` block
+    marks an ``ExperimentSpec``, anything else is parsed as a bare policy
+    ``RuntimeSpec`` (whose strict parser also reports malformed JSON).
+    Returns ``(kind_label, recorded_stats)``."""
+    with open(path, "r", encoding="utf-8") as fh:
+        text = fh.read()
+    try:
+        data = json.loads(text)
+    except json.JSONDecodeError:
+        data = None                    # let the strict spec parser report it
+    if isinstance(data, dict) and "workload" in data:
+        return "experiment ", validate_experiment(
+            ExperimentSpec.from_dict(data))
+    return "", validate_spec(RuntimeSpec.from_json(text))
+
+
 def iter_spec_files(paths) -> list[str]:
     out: list[str] = []
     for p in paths:
@@ -75,9 +126,8 @@ def main(argv: list[str]) -> int:
     failures = 0
     for path in paths:
         try:
-            spec = load(path)
-            stats = validate_spec(spec)
-            print(f"{path}: OK (executed={stats['executed']:.0f}, "
+            kind, stats = validate_file(path)
+            print(f"{path}: {kind}OK (executed={stats['executed']:.0f}, "
                   f"local={stats['local_fraction']:.2f}, "
                   f"steal={stats['steal_fraction']:.2f})")
         except Exception as e:                    # report all files, then fail

@@ -59,8 +59,9 @@ from .replay import (ReplayComparison, ReplayResult, TaskTiming,
 from .schema import SCHEMA_VERSION, SubmissionRecord, Trace, TraceSchemaError
 from .storms import (Window, depth_imbalance, detect_inline_bursts,
                      detect_steal_storms, render_timeline, windows)
-from .workloads import (Arrival, Workload, bursty, diurnal, drive, hot_skew,
-                        lognormal_costs, poisson, standard_scenarios)
+from .workloads import (Arrival, Workload, benchmark_waves, bursty, diurnal,
+                        drive, hot_skew, lognormal_costs, poisson,
+                        standard_scenarios)
 
 __all__ = [
     "MeasuredPenalty",
@@ -71,6 +72,6 @@ __all__ = [
     "SCHEMA_VERSION", "SubmissionRecord", "Trace", "TraceSchemaError",
     "Window", "depth_imbalance", "detect_inline_bursts",
     "detect_steal_storms", "render_timeline", "windows",
-    "Arrival", "Workload", "bursty", "diurnal", "drive", "hot_skew",
-    "lognormal_costs", "poisson", "standard_scenarios",
+    "Arrival", "Workload", "benchmark_waves", "bursty", "diurnal", "drive",
+    "hot_skew", "lognormal_costs", "poisson", "standard_scenarios",
 ]

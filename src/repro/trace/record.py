@@ -54,6 +54,13 @@ def executor_meta(ex: Executor) -> dict:
     spec = getattr(ex, "spec", None)
     if spec is not None:
         meta["spec"] = spec.to_dict()
+    experiment = getattr(ex, "experiment", None)
+    if experiment is not None:
+        # executors driven by repro.spec.experiments also name the full
+        # experiment (policy + workload + run parameters) that produced
+        # the trace; replay only needs "spec", but the workload block makes
+        # the trace a self-describing experiment artifact.
+        meta["experiment"] = experiment.to_dict()
     return meta
 
 

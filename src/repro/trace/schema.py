@@ -79,6 +79,14 @@ class Trace:
         return self.meta.get("spec")
 
     @property
+    def experiment_dict(self) -> dict[str, Any] | None:
+        """The serialized ``repro.spec.ExperimentSpec`` embedded in the
+        header when the run was driven by ``repro.spec.experiments``
+        (policy + workload + run parameters), or None.  Parse with
+        ``repro.spec.ExperimentSpec.from_dict``."""
+        return self.meta.get("experiment")
+
+    @property
     def n_tasks(self) -> int:
         return len(self.submissions)
 

@@ -50,11 +50,18 @@ class Arrival:
 
 @dataclasses.dataclass(frozen=True)
 class Workload:
-    """A named, finite, reproducible arrival stream."""
+    """A named, finite, reproducible arrival stream.
+
+    ``tail_steps`` appends that many arrival-free scheduling rounds after
+    the last arrival (the cadence a load generator keeps after its final
+    burst); ``drive`` steps through them before draining, so idle-poll
+    accounting is part of the workload's definition, not the drive loop's.
+    """
 
     name: str
     num_domains: int
     arrivals: tuple[Arrival, ...]
+    tail_steps: int = 0
 
     @property
     def n_tasks(self) -> int:
@@ -152,6 +159,39 @@ def lognormal_costs(workload: Workload, median: float = 1.0,
         workload, name=f"{workload.name}+lncost", arrivals=arrivals)
 
 
+def benchmark_waves(n_tasks: int, num_domains: int = 4,
+                    seed: int = 0) -> dict[str, Workload]:
+    """The online-runtime benchmark's hand-rolled wave scenarios as
+    ``Workload`` values (``benchmarks.runtime_throughput``'s historical
+    arrival construction, preserved arrival-for-arrival):
+
+      ``uniform`` — homes uniform over domains, 8 arrivals per round.
+      ``bursty``  — synchronized 64-task waves separated by 6 idle rounds
+                    (``tail_steps`` keeps the trailing idle rounds).
+      ``skewed``  — 80% of tasks homed on domain 0, 8 per round.
+
+    All three draw from one shared RNG stream in this order — that coupling
+    is part of the recorded benchmark numbers, so it is reproduced here
+    rather than cleaned up.
+    """
+    rng = np.random.default_rng(seed)
+
+    def batched(name: str, homes: np.ndarray, per_round: int) -> Workload:
+        arrivals = tuple(Arrival(step=i // per_round, home=int(h))
+                         for i, h in enumerate(homes))
+        return Workload(name, num_domains, arrivals)
+
+    uniform = batched("uniform_waves", rng.integers(0, num_domains, n_tasks), 8)
+    burst_homes = rng.integers(0, num_domains, n_tasks)
+    bursts = tuple(Arrival(step=(i // 64) * 7, home=int(h))
+                   for i, h in enumerate(burst_homes))
+    bursty_wl = Workload("bursty_waves", num_domains, bursts, tail_steps=6)
+    hot = rng.random(n_tasks) < 0.8
+    skew_homes = np.where(hot, 0, rng.integers(0, num_domains, n_tasks))
+    skewed = batched("skewed_waves", skew_homes, 8)
+    return {"uniform": uniform, "bursty": bursty_wl, "skewed": skewed}
+
+
 def standard_scenarios(num_domains: int = 4, steps: int = 48,
                        seed: int = 0) -> dict[str, Workload]:
     """The canonical scenario set the benchmarks compare policies across.
@@ -175,17 +215,36 @@ def standard_scenarios(num_domains: int = 4, steps: int = 48,
 
 
 def drive(executor: Executor, workload: Workload,
-          payload=None) -> Executor:
+          payload=None, drain_budget: int | None = None) -> Executor:
     """Run ``workload`` through ``executor``: submit each step's arrivals,
-    take one scheduling round, repeat; then drain.  Returns the executor
-    (stats/events on it).  Arrivals land at exactly ``Arrival.step`` on the
-    executor's step clock, so a recorded trace of this drive replays on the
-    same clock."""
+    take one scheduling round, repeat (through any ``tail_steps``); then
+    drain.  Returns the executor (stats/events on it).  Arrivals land at
+    exactly ``Arrival.step`` on the executor's step clock, so a recorded
+    trace of this drive replays on the same clock.
+
+    ``drain_budget`` caps the post-arrival drain at that many extra
+    scheduling rounds; exceeding it raises ``RuntimeError`` (the guard a
+    declarative experiment wants against a policy that cannot drain its
+    workload).  Within the budget the run is bit-identical to the unbounded
+    default."""
     by_step = workload.by_step()
-    for t in range(workload.horizon):
+    for t in range(workload.horizon + workload.tail_steps):
         for a in by_step.get(t, ()):
             executor.submit(executor.make_task(
                 payload=payload, home=a.home, cost=a.cost))
         executor.step()
-    executor.run_until_drained()
+    if drain_budget is None:
+        executor.run_until_drained()
+    else:
+        for _ in range(drain_budget):
+            if not len(executor.queues):
+                break
+            executor.step()
+        if len(executor.queues):
+            raise RuntimeError(
+                f"workload {workload.name!r} not drained within "
+                f"drain_budget={drain_budget} extra rounds "
+                f"({len(executor.queues)} tasks still queued)")
+        executor.results.clear()       # parity with run_until_drained, whose
+        # returned results this drive loop likewise discards
     return executor

@@ -1,0 +1,430 @@
+"""Declarative experiments: the policy × workload replay-conformance
+matrix, ExperimentSpec round-trips + golden files, governor-state
+checkpoints, and the v1/segmented trace back-compat contracts."""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro import spec, trace
+
+REPO = os.path.join(os.path.dirname(__file__), os.pardir)
+SPECS_DIR = os.path.join(REPO, "specs")
+EXPERIMENTS_DIR = os.path.join(SPECS_DIR, "experiments")
+V1_FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                          "v1_trace_fixture.jsonl")
+V1_SEGMENTS = os.path.join(os.path.dirname(__file__), "data", "v1_segments")
+
+MATRIX_WORKLOADS = ("poisson", "bursty", "diurnal", "hot_skew")
+
+
+def _small(exp, steps=12):
+    """A cheap copy of a registry experiment (fewer workload steps)."""
+    return dataclasses.replace(
+        exp, workload=dataclasses.replace(exp.workload, steps=steps))
+
+
+class TestConformanceMatrix:
+    """Every registry policy (the checked-in ``specs/*.json`` files) ×
+    every ``standard_scenarios`` workload: record a trace, then header-only
+    ``replay(trace)`` must reproduce the recorded ``RuntimeStats``
+    bit-identically.  Parametrized per cell, so a regression names the
+    exact (policy, workload) pair that diverged."""
+
+    @pytest.mark.parametrize("workload", MATRIX_WORKLOADS)
+    @pytest.mark.parametrize("policy", spec.policy_names())
+    def test_cell_replays_bit_identically(self, policy, workload):
+        with open(os.path.join(SPECS_DIR, f"{policy}.json"),
+                  encoding="utf-8") as fh:
+            s = spec.RuntimeSpec.from_json(fh.read())
+        assert s == spec.named(policy), \
+            f"golden file for {policy} drifted from the registry"
+        wl = spec.standard_workloads(num_domains=s.num_domains, steps=16,
+                                     seed=9)[workload].build()
+        built = s.build()
+        rec = built.recorder
+        if rec is None:
+            rec = trace.TraceRecorder()
+            rec.attach(built.executor)
+        trace.drive(built.executor, wl)
+        t = trace.loads_lines(trace.dumps_lines(rec.finish()))
+        res = trace.replay(t, assert_match=True)
+        assert res.matches_recorded, (policy, workload)
+
+
+class TestWorkloadSpec:
+    def test_standard_workloads_build_standard_scenarios(self):
+        for d, steps, seed in ((4, 16, 0), (2, 12, 3)):
+            std = trace.standard_scenarios(d, steps, seed)
+            for name, wl in spec.standard_workloads(d, steps, seed).items():
+                assert wl.build() == std[name], (d, steps, seed, name)
+
+    def test_runtime_workloads_build_benchmark_waves(self):
+        waves = trace.benchmark_waves(96, 4, 1)
+        for name, wl in spec.runtime_workloads(n_tasks=96, seed=1).items():
+            assert wl.build() == waves[name]
+
+    def test_bursty_waves_keep_trailing_idle_rounds(self):
+        wl = spec.WorkloadSpec(kind="bursty_waves", n_tasks=96).build()
+        assert wl.tail_steps == 6
+
+    def test_combinator_order_skew_then_costs(self):
+        w = spec.WorkloadSpec(kind="poisson", steps=24, rate=4.0,
+                              skew=spec.SkewSpec(hot_domain=1, p_hot=0.9,
+                                                 seed=2),
+                              costs=spec.CostsSpec(median=2.0, seed=3))
+        built = w.build()
+        by_hand = trace.lognormal_costs(
+            trace.hot_skew(trace.poisson(rate=4.0, steps=24, num_domains=4),
+                           hot_domain=1, p_hot=0.9, seed=2),
+            median=2.0, sigma=0.75, seed=3)
+        assert built == by_hand
+
+    def test_unknown_workload_kind_rejected(self):
+        with pytest.raises(spec.SpecError, match="workload.kind"):
+            spec.WorkloadSpec(kind="sinusoid")
+        with pytest.raises(spec.SpecError, match="workload.kind"):
+            spec.WorkloadSpec.from_dict({"kind": "warp"})
+
+    @pytest.mark.parametrize("payload,match", [
+        ({"rate": "4.0"}, "workload.rate"),
+        ({"seed": 2.5}, "workload.seed"),
+        ({"steps": "48"}, "workload.steps"),
+        ({"n_tasks": True}, "workload.n_tasks"),
+        ({"skew": {"p_hot": "0.8"}}, "workload.skew.p_hot"),
+        ({"costs": {"seed": 1.5}}, "workload.costs.seed"),
+        ({"ratee": 1.0}, "ratee"),
+    ])
+    def test_wrong_typed_or_unknown_fields_fail_parsing(self, payload, match):
+        with pytest.raises(spec.SpecError, match=match):
+            spec.WorkloadSpec.from_dict(payload)
+
+
+class TestExperimentSpec:
+    def test_registry_round_trip_exact(self):
+        for name in spec.experiment_names():
+            e = spec.experiment(name)
+            assert spec.ExperimentSpec.from_json(e.to_json()) == e
+            assert spec.ExperimentSpec.from_dict(
+                json.loads(json.dumps(e.to_dict()))) == e
+
+    def test_unknown_experiment_name_lists_registry(self):
+        with pytest.raises(spec.SpecError, match="replay_hot_skew"):
+            spec.experiment("nonexistent")
+
+    def test_unknown_experiment_version(self):
+        d = spec.experiment("poisson").to_dict()
+        d["experiment_version"] = 99
+        with pytest.raises(spec.SpecError, match="experiment_version"):
+            spec.ExperimentSpec.from_dict(d)
+
+    def test_missing_blocks_rejected(self):
+        with pytest.raises(spec.SpecError, match="policy"):
+            spec.ExperimentSpec.from_dict({"repeats": 1})
+
+    def test_wrong_typed_run_parameters(self):
+        d = spec.experiment("poisson").to_dict()
+        d["drain_budget"] = "10"
+        with pytest.raises(spec.SpecError, match="drain_budget"):
+            spec.ExperimentSpec.from_dict(d)
+        d = spec.experiment("poisson").to_dict()
+        d["repeats"] = 1.5
+        with pytest.raises(spec.SpecError, match="repeats"):
+            spec.ExperimentSpec.from_dict(d)
+
+    def test_domain_mismatch_rejected(self):
+        with pytest.raises(spec.SpecError, match="domains"):
+            spec.ExperimentSpec(
+                policy=spec.named("paper_cyclic"),          # 4 domains
+                workload=spec.WorkloadSpec(num_domains=2))
+
+    def test_nested_errors_name_the_block(self):
+        d = spec.experiment("poisson").to_dict()
+        d["policy"]["governor"]["ema"] = "0.5"
+        with pytest.raises(spec.SpecError,
+                           match=r"experiment.policy.governor.ema"):
+            spec.ExperimentSpec.from_dict(d)
+
+
+class TestExperimentGoldenFiles:
+    """specs/experiments/<name>.json pins every registry experiment."""
+
+    @pytest.mark.parametrize("name", spec.experiment_names())
+    def test_golden_file_matches_registry(self, name):
+        path = os.path.join(EXPERIMENTS_DIR, f"{name}.json")
+        with open(path, "r", encoding="utf-8") as fh:
+            text = fh.read()
+        assert text == spec.experiment(name).to_json(), (
+            f"{path} is stale: regenerate with "
+            f"spec.dump_experiment(spec.experiment({name!r}), {path!r})")
+
+    def test_no_orphan_golden_files(self):
+        on_disk = {f[:-5] for f in os.listdir(EXPERIMENTS_DIR)
+                   if f.endswith(".json")}
+        assert on_disk == set(spec.experiment_names())
+
+
+class TestPropertyRoundTrip:
+    def test_randomized_experiments_round_trip_exactly(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        seeds = st.integers(min_value=0, max_value=2**31 - 1)
+        pos = st.floats(min_value=0.05, max_value=64.0, allow_nan=False)
+        fracs = st.floats(min_value=0.01, max_value=1.0, allow_nan=False)
+        skews = st.one_of(st.none(), st.builds(
+            spec.SkewSpec, hot_domain=st.just(0), p_hot=fracs, seed=seeds))
+        costs = st.one_of(st.none(), st.builds(
+            spec.CostsSpec, median=pos,
+            sigma=st.floats(min_value=0.0, max_value=2.0, allow_nan=False),
+            seed=seeds))
+        workloads = st.builds(
+            spec.WorkloadSpec, kind=st.sampled_from(spec.WorkloadSpec.KINDS),
+            num_domains=st.integers(1, 8), steps=st.integers(1, 64),
+            seed=seeds, rate=pos, rate_quiet=pos, rate_storm=pos,
+            p_enter=fracs, p_exit=fracs,
+            trough_frac=st.floats(min_value=0.0, max_value=1.0,
+                                  allow_nan=False),
+            periods=pos, cost=pos, n_tasks=st.integers(1, 2000),
+            skew=skews, costs=costs)
+        states = st.one_of(st.none(), st.builds(
+            spec.GovernorStateSpec, penalty_estimate=pos, task_cost=pos,
+            observed_local=st.integers(0, 10**6),
+            observed_steals=st.integers(0, 10**6)))
+
+        @st.composite
+        def experiments(draw):
+            wl = draw(workloads)
+            policy = dataclasses.replace(
+                spec.named(draw(st.sampled_from(
+                    ("paper_cyclic", "adaptive_theta", "controlled_replay",
+                     "measured_theta")))),
+                num_domains=wl.num_domains, seed=draw(seeds))
+            state = draw(states)
+            if state is not None and policy.governor.kind in ("adaptive",
+                                                              "measured"):
+                policy = dataclasses.replace(
+                    policy, governor=dataclasses.replace(policy.governor,
+                                                         state=state))
+            return spec.ExperimentSpec(
+                policy=policy, workload=wl, repeats=draw(st.integers(1, 4)),
+                drain_budget=draw(st.one_of(st.none(),
+                                            st.integers(1, 10**5))))
+
+        @settings(max_examples=50, deadline=None)
+        @given(exp=experiments())
+        def check(exp):
+            assert spec.ExperimentSpec.from_json(exp.to_json()) == exp
+
+        check()
+
+
+class TestExperimentRun:
+    def test_run_executes_declared_workload_and_names_itself(self):
+        exp = _small(spec.experiment("replay_poisson"))
+        res = exp.run()
+        run = res.primary
+        assert run.stats["executed"] == res.workload.n_tasks
+        t = trace.loads_lines(trace.dumps_lines(run.trace))
+        assert spec.RuntimeSpec.from_dict(t.spec_dict) == exp.policy
+        assert spec.ExperimentSpec.from_dict(t.experiment_dict) == exp
+
+    def test_repeats_shift_the_policy_seed(self):
+        exp = dataclasses.replace(_small(spec.experiment("poisson")),
+                                  repeats=3)
+        res = exp.run()
+        assert [r.seed for r in res.runs] == [0, 1, 2]
+        for r, run in enumerate(res.runs):
+            embedded = spec.RuntimeSpec.from_dict(run.trace.spec_dict)
+            assert embedded.seed == exp.policy.seed + r
+            trace.replay(run.trace, assert_match=True)
+
+    def test_drain_budget_guards_undrainable_runs(self):
+        # no stealing + a hot domain: the backlog drains one task per round,
+        # far beyond a 1-round budget
+        exp = dataclasses.replace(_small(spec.experiment("hot_skew")),
+                                  policy=spec.named("static_local"),
+                                  drain_budget=1)
+        with pytest.raises(RuntimeError, match="drain_budget"):
+            exp.run()
+        # a generous budget is bit-identical to the unbounded default
+        free = dataclasses.replace(exp, drain_budget=None).run()
+        capped = dataclasses.replace(exp, drain_budget=10_000).run()
+        assert free.primary.stats == capped.primary.stats
+
+    def test_validate_experiment_gate(self):
+        from repro.spec.validate import validate_experiment
+
+        stats = validate_experiment(_small(spec.experiment("replay_bursty")))
+        assert stats["executed"] > 0
+
+
+class TestGovernorStateCheckpoint:
+    """Governor *state* snapshots: the learned θ inputs serialize into the
+    spec, so a mid-run checkpoint rebuilds the exact estimator without
+    re-reading a trace."""
+
+    def _measured_run(self):
+        exp = dataclasses.replace(
+            _small(spec.experiment("hot_skew"), steps=16),
+            policy=dataclasses.replace(spec.named("measured_theta")))
+        return exp.run().primary.executor
+
+    def test_checkpoint_rebuilds_exact_estimator(self):
+        ex = self._measured_run()
+        ck = spec.checkpoint(ex)
+        assert spec.RuntimeSpec.from_json(ck.to_json()) == ck
+        rebuilt = ck.build().executor.governor
+        live = ex.governor
+        assert rebuilt.penalty_estimate == live.penalty_estimate
+        assert rebuilt.task_cost == live.task_cost
+        assert rebuilt.threshold == live.threshold
+        assert rebuilt.observed_local == live.observed_local
+        assert rebuilt.observed_steals == live.observed_steals
+
+    def test_state_supersedes_priors_not_hyperparameters(self):
+        g = spec.GovernorSpec(kind="adaptive", penalty_hint=4.0, ema=0.5,
+                              state=spec.GovernorStateSpec(
+                                  penalty_estimate=9.0, task_cost=3.0))
+        gov = spec.build_governor(g)
+        assert gov.penalty_estimate == 9.0
+        assert gov.task_cost == 3.0
+        assert gov.ema == 0.5
+        assert gov.threshold == 3                 # 9 / 3
+
+    def test_state_matches_from_trace_seeding(self):
+        """The declarative path equals ``MeasuredPenalty.from_trace``:
+        snapshot the trace-seeded governor once, rebuild from spec data."""
+        t = _small(spec.experiment("replay_hot_skew")).run().primary.trace
+        seeded = trace.MeasuredPenalty.from_trace(t)
+        g = spec.GovernorSpec(
+            kind="measured",
+            state=spec.GovernorStateSpec.from_governor(seeded))
+        rebuilt = spec.build_governor(g)
+        assert rebuilt.penalty_estimate == seeded.penalty_estimate
+        assert rebuilt.task_cost == seeded.task_cost
+        assert rebuilt.threshold == seeded.threshold
+        assert rebuilt.observed_steals == seeded.observed_steals
+
+    def test_breaker_wrapped_governor_unwraps(self):
+        policy = dataclasses.replace(
+            spec.named("measured_spill"))             # adaptive + breaker
+        exp = spec.ExperimentSpec(
+            policy=policy,
+            workload=spec.standard_workloads(steps=12)["hot_skew"])
+        res = exp.run()
+        built = res.primary.built
+        state = spec.GovernorStateSpec.from_governor(
+            built.executor.governor)
+        assert state.penalty_estimate == \
+            built.executor.governor.inner.penalty_estimate
+        # the control plane exports the same state (its checkpoint surface)
+        assert built.control.governor_state() == state
+        ck = spec.checkpoint(built.executor)
+        assert ck.governor.state == state
+
+    def test_stateless_governors_refuse_snapshot(self):
+        ex = spec.named("paper_cyclic").build().executor
+        with pytest.raises(spec.SpecError, match="learned"):
+            spec.checkpoint(ex)
+        with pytest.raises(spec.SpecError, match="governor.state"):
+            spec.GovernorSpec(kind="greedy",
+                              state=spec.GovernorStateSpec())
+
+
+class TestTraceBackCompat:
+    """The experiment path inherits both trace back-compat contracts:
+    v1 traces keep the explicit-executor replay contract, and rotating
+    segment directories read transparently."""
+
+    V1_POLICY = spec.RuntimeSpec(
+        num_domains=3, seed=7,
+        penalty=spec.PenaltySpec(kind="constant", value=2.0))
+
+    def test_v1_single_file_replays_under_declarative_policy(self):
+        t = trace.TraceReader(V1_FIXTURE).read()
+        assert t.spec_dict is None and t.experiment_dict is None
+        res = trace.replay(t, lambda tr: self.V1_POLICY.build().executor,
+                           assert_match=True)
+        assert res.matches_recorded
+
+    def test_v1_segmented_fixture_reads_and_replays(self):
+        t = trace.TraceReader(V1_SEGMENTS).read()
+        assert t.spec_dict is None
+        assert t.n_tasks == 26 and t.total_steps == 10
+        # the recorded workload is itself declarable: same arrival stream
+        wl = spec.WorkloadSpec(kind="poisson", num_domains=3, steps=10,
+                               seed=7, rate=3.0).build()
+        assert sorted((s.step, s.home) for s in t.submissions) == \
+            sorted((a.step, a.home) for a in wl.arrivals)
+        res = trace.replay(t, lambda tr: self.V1_POLICY.build().executor,
+                           assert_match=True)
+        assert res.matches_recorded
+        # without the (unserialized, v1) penalty the meta fallback diverges
+        assert "steal_penalty" in trace.replay(t).mismatches()
+
+    def test_experiment_streams_rotating_segments(self, tmp_path):
+        policy = dataclasses.replace(
+            spec.named("replay_baseline"),
+            trace=spec.TraceSpec(record=True, segment_records=8))
+        exp = dataclasses.replace(
+            _small(spec.experiment("replay_bursty")), policy=policy,
+            repeats=2)
+        exp.run(trace_path=tmp_path)
+        for r in range(2):
+            seg_dir = tmp_path / f"run-{r}"
+            assert len(list(seg_dir.glob("segment-*.jsonl"))) > 1
+            t = trace.TraceReader(seg_dir).read()
+            assert t.experiment_dict is not None
+            res = trace.replay(t, assert_match=True)
+            assert res.matches_recorded
+
+
+class TestBenchmarkCli:
+    def test_unknown_policy_lists_registry_names(self):
+        from benchmarks.run import _cli_spec
+
+        with pytest.raises(SystemExit, match="paper_cyclic"):
+            _cli_spec(["--policy", "nonexistent"])
+
+    def test_unreadable_spec_file_is_a_clean_exit(self):
+        from benchmarks.run import _cli_spec
+
+        with pytest.raises(SystemExit, match="no/such"):
+            _cli_spec(["--spec", "no/such/policy.json"])
+
+    def test_unknown_experiment_lists_registry_names(self):
+        from benchmarks.run import _cli_experiments
+
+        with pytest.raises(SystemExit, match="replay_hot_skew"):
+            _cli_experiments(["--experiment", "nonexistent"])
+
+    def test_experiment_resolution_name_and_file(self):
+        from benchmarks.run import _cli_experiments
+
+        by_name = _cli_experiments(["--experiment", "poisson"])
+        assert by_name == ({"poisson": spec.experiment("poisson")}, False)
+        path = os.path.join(EXPERIMENTS_DIR, "poisson.json")
+        assert _cli_experiments(["--experiment", path]) == by_name
+        assert _cli_experiments([]) is None
+        # only the full set may refresh the committed BENCH artifact
+        experiments, full_set = _cli_experiments(["--experiment", "all"])
+        assert full_set and set(experiments) == set(spec.experiment_names())
+
+    def test_run_experiments_reports_replay_conformance(self, tmp_path):
+        from benchmarks.run import run_experiments
+
+        exp = _small(spec.experiment("replay_poisson"))
+        json_path = tmp_path / "BENCH_experiments.json"
+        lines = run_experiments({"replay_poisson_small": exp},
+                                json_path=str(json_path))
+        assert lines[0].startswith("experiment,repeat,")
+        row = lines[1].split(",")
+        assert row[0] == "replay_poisson_small" and row[-1] == "1"
+        data = json.loads(json_path.read_text())
+        run = data["results"]["replay_poisson_small"]["runs"][0]
+        assert run["replay_exact"] is True
+        assert data["results"]["replay_poisson_small"]["experiment"] == \
+            exp.to_dict()
