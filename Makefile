@@ -2,7 +2,7 @@
 # works without an editable install.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test smoke bench trace control spec experiments
+.PHONY: test smoke bench trace control spec experiments topology
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -43,3 +43,10 @@ spec:
 experiments:
 	$(PY) -m benchmarks.run --experiment all
 	$(PY) examples/run_experiment.py
+
+# topology gate: flat-vs-hierarchical stealing A/B over the checked-in
+# topology experiments — asserts fewer cross-socket steals and no
+# throughput loss under the two-level tree, plus header-only (schema v3)
+# replay bit-identity for every arm (writes BENCH_topology.json)
+topology:
+	$(PY) -m benchmarks.topology_locality

@@ -277,6 +277,20 @@ def main() -> None:
                     f"hot_thr_gain={thr_co / max(thr_un, 1e-9):.2f}x,"
                     f"storms={storms}->{storms_co}"))
 
+    from benchmarks import topology_locality
+    t0 = time.time()
+    lines = topology_locality.main(steps=96 if full else 48,
+                                   json_path="BENCH_topology.json")
+    dt = time.time() - t0
+    _block("Topology: flat vs hierarchical distance-aware stealing", lines)
+    rows = {tuple(l.split(",")[:2]): l.split(",") for l in lines[1:]}
+    rem_flat = int(rows[("hot_skew", "topology_flat")][7])
+    rem_two = int(rows[("hot_skew", "topology_two_level")][7])
+    loc_pods = float(rows[("hot_skew", "topology_pods_adaptive")][5])
+    summary.append(("topology_locality", dt * 1e6 / max(len(lines), 1),
+                    f"hot_cross_socket={rem_flat}->{rem_two},"
+                    f"pods_local={loc_pods:.2f}"))
+
     from benchmarks import table1_stream
     t0 = time.time()
     lines = table1_stream.main()

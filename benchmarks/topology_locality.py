@@ -1,0 +1,140 @@
+"""Topology locality A/B: flat vs hierarchical distance-aware stealing.
+
+    PYTHONPATH=src python -m benchmarks.topology_locality [--fast]
+
+The paper's machine is two ccNUMA sockets; its locality queues exist
+because a steal across the socket link costs more than one inside it.
+``repro.topology`` makes that structure explicit — a ``DistanceMatrix``
+the steal scan walks nearest-tier-first — and this benchmark measures what
+the structure buys on the storm-prone workloads:
+
+  topology_flat            8 domains on an explicit flat tree (distance 1
+                           everywhere): builds the seed repo's exact
+                           single-level scan — the baseline arm, and the
+                           proof that a flat ``TopologySpec`` is a no-op.
+  topology_two_level       the same greedy runtime on a 4+4 socket pair
+                           (near 1, far 4): the scan exhausts in-socket
+                           victims before touching the cross-socket link.
+  topology_pods_adaptive   the full hierarchical control plane on a 2×4
+                           pod tree: adaptive per-level θ, level-aware
+                           breaker, breaker-aware cost routing, per-domain
+                           governed batching.
+
+Every arm × workload is a checked-in declarative experiment
+(``repro.spec.topology_experiments``); this module owns no policy or
+workload construction.  The flat arm's steals are additionally classified
+*under the two-level lens* — the same 4+4 ``DistanceMatrix`` the two-level
+arm actually consults — so "remote" means the same physical link in both
+columns and the comparison is apples to apples.
+
+Acceptance gates (asserted inline):
+  * every recorded trace replays bit-identically from its header alone
+    (schema v3 carries the topology — no factory, no spec lookup);
+  * on every workload the two-level arm's cross-socket steals are below
+    the flat arm's (what flat stealing silently did across the link);
+  * two-level throughput >= flat throughput (locality must not cost
+    progress — greedy one-task grabs make victim *eligibility*
+    level-order-invariant, so this holds exactly).
+
+CSV: scenario,arm,tasks,makespan,throughput,local_frac,steal_frac,
+remote_steals,steal_penalty,replay_exact
+
+``main(json_path=...)`` (default ``BENCH_topology.json`` as a script)
+also writes the machine-readable summary per scenario/arm.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+STEPS = 48
+SEED = 0
+ARMS = ("topology_flat", "topology_two_level", "topology_pods_adaptive")
+SCENARIOS = ("hot_skew", "bursty")
+SOCKET_GROUPS = [4, 4]        # the two-level lens: matches topology_two_level
+
+
+def _remote_under_lens(events, lens) -> int:
+    """Steals that crossed ``lens``'s level-2+ links, whatever the run's
+    own topology thought (the flat arm consults none)."""
+    from repro.trace import event_stolen
+    return sum(1 for e in events
+               if event_stolen(e) and lens.level(e.src_domain, e.domain) >= 2)
+
+
+def _makespan(events) -> int:
+    """Last execution step + 1 (replay's forced trailing rounds are idle
+    by construction and say nothing about the policy)."""
+    steps = [e.step for e in events if e.kind in ("run", "steal", "inline")]
+    return (max(steps) + 1) if steps else 1
+
+
+def main(steps: int = STEPS, seed: int = SEED,
+         json_path: str | None = None) -> list[str]:
+    from repro.spec import topology_experiments
+    from repro.topology import grouped
+    from repro.trace import dumps_lines, loads_lines, replay
+
+    lens = grouped(SOCKET_GROUPS)
+    experiments = topology_experiments(steps=steps, seed=seed)
+    lines = ["scenario,arm,tasks,makespan,throughput,local_frac,steal_frac,"
+             "remote_steals,steal_penalty,replay_exact"]
+    results: dict[str, dict] = {}
+    failures: list[str] = []
+    for scenario in SCENARIOS:
+        per_arm: dict[str, dict] = {}
+        for arm in ARMS:
+            exp = experiments[f"{arm}_{scenario}"]
+            run = exp.run().primary
+            # conformance gate: through the JSONL wire format, the header
+            # alone (schema v3: spec + topology) must rebuild the recorded
+            # hierarchical system bit-for-bit.
+            rep = replay(loads_lines(dumps_lines(run.trace)))
+            if not rep.matches_recorded:
+                failures.append(f"{arm}/{scenario}: header-only replay "
+                                f"diverged: {rep.mismatches()}")
+            s = run.stats
+            events = run.trace.events
+            makespan = _makespan(events)
+            remote = _remote_under_lens(events, lens)
+            per_arm[arm] = {
+                "tasks": int(s["executed"]), "makespan": makespan,
+                "throughput": s["executed"] / makespan,
+                "remote_steals_under_lens": remote,
+                "replay_exact": rep.matches_recorded, **s,
+            }
+            lines.append(
+                f"{scenario},{arm},{s['executed']:.0f},{makespan},"
+                f"{s['executed'] / makespan:.4f},{s['local_fraction']:.3f},"
+                f"{s['steal_fraction']:.3f},{remote},"
+                f"{s['steal_penalty']:.0f},{int(rep.matches_recorded)}")
+        flat, two = per_arm["topology_flat"], per_arm["topology_two_level"]
+        if two["remote_steals_under_lens"] >= flat["remote_steals_under_lens"]:
+            failures.append(
+                f"{scenario}: two-level arm crossed the socket "
+                f"{two['remote_steals_under_lens']}x vs flat's "
+                f"{flat['remote_steals_under_lens']}x — nearest-first "
+                "stealing failed to keep work in-socket")
+        if two["throughput"] < flat["throughput"]:
+            failures.append(
+                f"{scenario}: two-level throughput {two['throughput']:.4f} "
+                f"< flat {flat['throughput']:.4f} — locality cost progress")
+        results[scenario] = per_arm
+    if json_path:
+        with open(json_path, "w", encoding="utf-8") as fh:
+            json.dump({"bench": "topology", "steps": steps, "seed": seed,
+                       "socket_lens": SOCKET_GROUPS, "results": results},
+                      fh, indent=2)
+            fh.write("\n")
+    if failures:
+        raise SystemExit("topology locality gate failure:\n  "
+                         + "\n  ".join(failures))
+    return lines
+
+
+if __name__ == "__main__":
+    fast = "--fast" in sys.argv
+    for ln in main(steps=24 if fast else STEPS,
+                   json_path="BENCH_topology.json"):
+        print(ln)
+    print("\n# topology benchmark complete (BENCH_topology.json written)")

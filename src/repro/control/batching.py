@@ -36,16 +36,30 @@ class BatchGovernor:
     read before each grab and an ``on_batch(n_tasks, service)`` feedback
     call after it.
 
+    With ``per_domain=True`` the governor keeps one service EMA *per source
+    queue* under the same global ``target_service`` budget — a domain
+    serving long prefills grabs thin batches while a domain of cheap tasks
+    grabs wide ones, instead of one global estimate splitting the
+    difference and mis-sizing both.  The executor then reads
+    ``size_for(domain)`` per grab and feeds back
+    ``on_batch(n_tasks, service, domain)``; the global EMA keeps updating
+    alongside (it sizes domains never yet observed, and remains the
+    ``service_estimate``/``size`` surface).
+
     Parameters
     ----------
     target_service:  service budget (cost units) one grab should fill.
     batch_min/cap:   hard clamp on the adapted size.
     ema:             smoothing of the per-task service estimate in (0, 1].
     init_size:       batch size before the first measurement.
+    per_domain:      size grabs from each queue by that queue's own EMA.
     """
 
+    per_domain: bool
+
     def __init__(self, target_service: float = 8.0, batch_min: int = 1,
-                 batch_cap: int = 8, ema: float = 0.25, init_size: int = 1):
+                 batch_cap: int = 8, ema: float = 0.25, init_size: int = 1,
+                 per_domain: bool = False):
         if target_service <= 0:
             raise ValueError("target_service must be positive")
         if not 1 <= batch_min <= batch_cap:
@@ -56,15 +70,28 @@ class BatchGovernor:
         self.batch_min = batch_min
         self.batch_cap = batch_cap
         self.ema = ema
+        self.per_domain = per_domain
         self._size = min(max(init_size, batch_min), batch_cap)
         self._per_task: float | None = None
+        self._domain_per_task: dict[int, float] = {}
         self.batches = 0
         self.tasks = 0
 
     @property
     def size(self) -> int:
-        """Batch-grab limit for the next grab."""
+        """Batch-grab limit for the next grab (the global estimate)."""
         return self._size
+
+    def size_for(self, domain: int) -> int:
+        """Grab limit for a batch sourced from ``domain``: sized by that
+        domain's own service EMA when ``per_domain`` and one exists, else
+        the global ``size``."""
+        if not self.per_domain:
+            return self._size
+        per = self._domain_per_task.get(domain)
+        if per is None:
+            return self._size
+        return self._clamp(per)
 
     @property
     def budget(self) -> float:
@@ -76,15 +103,45 @@ class BatchGovernor:
         """EMA of per-task service over observed batches (None pre-warmup)."""
         return self._per_task
 
-    def on_batch(self, n_tasks: int, service: float) -> None:
+    def domain_service_estimates(self) -> dict[int, float]:
+        """Per-domain per-task service EMAs (domain -> estimate); empty
+        unless ``per_domain`` has observed grabs.  Snapshot surface for
+        ``repro.spec.BatchStateSpec``."""
+        return dict(self._domain_per_task)
+
+    def seed_state(self, service_estimate: float | None = None,
+                   size: int | None = None,
+                   domain_estimates: dict[int, float] | None = None) -> None:
+        """Restore learned state onto a fresh governor (checkpoint/restore
+        counterpart of ``service_estimate``/``size``/
+        ``domain_service_estimates``)."""
+        if service_estimate is not None:
+            self._per_task = float(service_estimate)
+        if size is not None:
+            self._size = min(max(int(size), self.batch_min), self.batch_cap)
+        if domain_estimates:
+            self._domain_per_task.update(
+                {int(d): float(v) for d, v in domain_estimates.items()})
+
+    def _clamp(self, per_task: float) -> int:
+        return min(max(round(self.target_service / per_task),
+                       self.batch_min), self.batch_cap)
+
+    def on_batch(self, n_tasks: int, service: float,
+                 domain: int = -1) -> None:
         """Feed one executed grab: ``n_tasks`` served, ``service`` total
-        cost+penalty delivered.  Called by the executor after every grab."""
+        cost+penalty delivered, ``domain`` the queue the grab drained (only
+        used when ``per_domain``).  Called by the executor after every
+        grab."""
         if n_tasks < 1:
             return
         per = max(service / n_tasks, _MIN_SERVICE)
         self._per_task = (per if self._per_task is None else
                           (1 - self.ema) * self._per_task + self.ema * per)
-        self._size = min(max(round(self.target_service / self._per_task),
-                             self.batch_min), self.batch_cap)
+        self._size = self._clamp(self._per_task)
+        if self.per_domain and domain >= 0:
+            prev = self._domain_per_task.get(domain)
+            self._domain_per_task[domain] = (
+                per if prev is None else (1 - self.ema) * prev + self.ema * per)
         self.batches += 1
         self.tasks += n_tasks

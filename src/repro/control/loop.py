@@ -105,6 +105,7 @@ class ControlLoop:
         if self.router is not None:
             out["routed"] = self.router.routed
             out["spilled"] = self.router.spilled
+            out["remote_spills"] = self.router.remote_spills
         if self.batcher is not None:
             out["batch_size"] = self.batcher.size
             out["batches"] = self.batcher.batches
@@ -114,4 +115,5 @@ class ControlLoop:
         if self.breaker is not None:
             out["breaker_trips"] = self.breaker.trips
             out["breaker_tripped"] = int(self.breaker.tripped)
+            out["breaker_remote_trips"] = self.breaker.remote_trips
         return out

@@ -40,6 +40,14 @@ from ..runtime import Executor, Task
 class CostRouter:
     """Route submissions to the domain with the least estimated backlog time.
 
+    Under a hierarchical topology (the bound executor carries a
+    ``repro.topology.DistanceMatrix``), a homed task's spill candidates are
+    considered nearest tier first and each tier's threshold is scaled by
+    its link distance: spilling within the home socket asks the flat gap,
+    spilling across the socket (or pod) must pay proportionally more —
+    within-socket relief is exhausted before work leaves the socket, the
+    submit-side mirror of the queues' nearest-first steal scan.
+
     Parameters
     ----------
     spill_penalty:  backlog-time gap (in cost units) a homed task's home
@@ -51,16 +59,24 @@ class CostRouter:
                     governor ``penalty_estimate`` instead of the static
                     ``spill_penalty`` hint (which remains the fallback for
                     governors that measure nothing, e.g. ``GreedySteal``).
+    breaker_aware:  consult the bound executor's ``StormBreaker`` (when its
+                    governor is one): while the full breaker is tripped,
+                    homed tasks are never spilled (routing must not re-feed
+                    the storm the breaker is quenching); while only the
+                    remote state is tripped, spills stay within the home's
+                    nearest tier.
     """
 
     def __init__(self, spill_penalty: Optional[float] = 4.0,
-                 measured: bool = False):
+                 measured: bool = False, breaker_aware: bool = False):
         self.spill_penalty = spill_penalty
         self.measured = measured
+        self.breaker_aware = breaker_aware
         self._ex: Optional[Executor] = None
         self._workers_per_domain: list[int] = []
         self.routed = 0
-        self.spilled = 0     # homed tasks sent away from their home
+        self.spilled = 0         # homed tasks sent away from their home
+        self.remote_spills = 0   # spills that crossed a topology tier >= 2
 
     def bind(self, executor: Executor) -> "CostRouter":
         """Point the router at ``executor``'s queues/worker layout (done by
@@ -95,17 +111,59 @@ class CostRouter:
                 return float(est)
         return self.spill_penalty
 
+    def _breaker_states(self) -> tuple[bool, bool]:
+        """(full_tripped, remote_tripped) of the bound executor's breaker
+        when ``breaker_aware``; (False, False) otherwise or when the
+        governor is no breaker."""
+        if not self.breaker_aware or self._ex is None:
+            return False, False
+        gov = self._ex.governor
+        return (bool(getattr(gov, "tripped", False)),
+                bool(getattr(gov, "remote_tripped", False)))
+
     def route(self, task: Task) -> int:
         """Submit domain for ``task``: least-backlog, home-sticky up to
-        ``spill_threshold()`` (the ``Executor(router=...)`` callback)."""
+        ``spill_threshold()`` (the ``Executor(router=...)`` callback).
+
+        Hierarchical topologies spill nearest-first with distance-scaled
+        thresholds; ``breaker_aware`` suspends spilling while the breaker
+        quenches a storm (remote-only trips only suspend cross-tier
+        spills).  Homeless tasks always join the least-backlog domain.
+        """
         backlogs = [self.backlog_time(d)
                     for d in range(self._ex.num_domains)]
         best = min(range(len(backlogs)), key=lambda d: (backlogs[d], d))
         self.routed += 1
         home = task.home
-        if 0 <= home < len(backlogs) and backlogs[home] < math.inf:
-            spill = self.spill_threshold()
+        if not (0 <= home < len(backlogs) and backlogs[home] < math.inf):
+            return best
+        tripped, remote_tripped = self._breaker_states()
+        if tripped:
+            return home
+        spill = self.spill_threshold()
+        topo = getattr(self._ex, "topology", None)
+        if topo is None or not topo.hierarchical:
             if spill is None or backlogs[home] - backlogs[best] <= spill:
                 return home
             self.spilled += 1
-        return best
+            return best
+        if spill is None:
+            return home
+        for level in range(1, topo.num_levels + 1):
+            if level >= 2 and remote_tripped:
+                break
+            cands = [d for d in topo.peers(home, level)
+                     if backlogs[d] < math.inf]
+            if not cands:
+                continue
+            cand = min(cands, key=lambda d: (backlogs[d], d))
+            # the gap must beat the spill threshold scaled by the link the
+            # task's data would be accessed across — within-socket relief
+            # is exhausted before work leaves the socket
+            if (backlogs[home] - backlogs[cand]
+                    > spill * topo.distance(home, cand)):
+                self.spilled += 1
+                if level >= 2:
+                    self.remote_spills += 1
+                return cand
+        return home

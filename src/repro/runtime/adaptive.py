@@ -36,15 +36,27 @@ class StealGovernor:
         ``None`` forbids stealing entirely for this attempt."""
         return 1
 
+    def min_victim_depth_at(self, worker: Worker,
+                            level: int) -> Optional[int]:
+        """Per-topology-tier form of ``min_victim_depth`` (level 1 = the
+        nearest tier).  The executor consults it only under a hierarchical
+        ``repro.topology.DistanceMatrix``; the base contract prices every
+        tier at the flat threshold, so level-blind governors behave
+        identically on flat and hierarchical machines."""
+        return self.min_victim_depth(worker)
+
     def on_idle(self, worker: Worker) -> None:
         """Called when ``worker`` polled and found nothing it may take."""
 
     def on_execute(self, worker: Worker, stolen: bool, penalty: float,
-                   cost: float = 1.0) -> None:
+                   cost: float = 1.0, level: int = 1) -> None:
         """Called after ``worker`` executed a task.  ``cost`` is the task's
         local execution cost (its measured service time is ``cost+penalty``)
         so governors can learn service times online instead of being
-        configured with static hints (``repro.trace.MeasuredPenalty``)."""
+        configured with static hints (``repro.trace.MeasuredPenalty``).
+        ``level`` is the topology tier the task was stolen across (1 on
+        flat machines, 0 for local executions) so governors can learn
+        per-tier penalties."""
 
 
 class GreedySteal(StealGovernor):
@@ -68,6 +80,14 @@ class AdaptiveSteal(StealGovernor):
     eventually — progress is guaranteed and the throttle only reorders work.
     The penalty estimate starts at ``penalty_hint`` and follows observed
     steal penalties by an exponential moving average.
+
+    Under a hierarchical topology the governor additionally learns one
+    penalty EMA *per steal tier* (steals report their topology ``level``):
+    crossing a pod costs more than crossing a socket, so each tier earns its
+    own θ (``min_victim_depth_at``), seeded from the flat ``penalty_hint``
+    until that tier has been observed.  The flat ``threshold`` /
+    ``penalty_estimate`` pair keeps its original all-steals semantics, so
+    flat-machine behaviour (every steal is level 1) is unchanged.
     """
 
     def __init__(self, penalty_hint: float = 4.0, task_cost: float = 1.0,
@@ -80,6 +100,7 @@ class AdaptiveSteal(StealGovernor):
         self.ema = ema
         self.max_threshold = max_threshold
         self._penalty = float(penalty_hint)
+        self._level_penalty: dict[int, float] = {}
         self._idle: defaultdict[int, int] = defaultdict(int)
 
     @property
@@ -91,14 +112,40 @@ class AdaptiveSteal(StealGovernor):
     def penalty_estimate(self) -> float:
         return self._penalty
 
+    def threshold_at(self, level: int) -> int:
+        """Per-tier θ: priced from that tier's own penalty EMA, falling back
+        to the flat estimate for tiers never yet stolen across."""
+        est = self._level_penalty.get(level, self._penalty)
+        return min(max(round(est / self.task_cost), 1), self.max_threshold)
+
+    def level_penalty_estimates(self) -> dict[int, float]:
+        """Learned per-tier penalty EMAs (tier -> estimate); empty until a
+        hierarchical run reports steal levels.  Snapshot surface for
+        ``repro.spec.GovernorStateSpec``."""
+        return dict(self._level_penalty)
+
+    def seed_level_penalties(self, estimates: dict[int, float]) -> None:
+        """Restore per-tier penalty EMAs from a snapshot (checkpoint/
+        restore counterpart of ``level_penalty_estimates``)."""
+        self._level_penalty.update(
+            {int(lv): float(est) for lv, est in estimates.items()})
+
     def min_victim_depth(self, worker: Worker) -> Optional[int]:
         return max(self.threshold - self._idle[worker.wid], 1)
+
+    def min_victim_depth_at(self, worker: Worker,
+                            level: int) -> Optional[int]:
+        return max(self.threshold_at(level) - self._idle[worker.wid], 1)
 
     def on_idle(self, worker: Worker) -> None:
         self._idle[worker.wid] += 1
 
     def on_execute(self, worker: Worker, stolen: bool, penalty: float,
-                   cost: float = 1.0) -> None:
+                   cost: float = 1.0, level: int = 1) -> None:
         self._idle[worker.wid] = 0
         if stolen:
             self._penalty = (1 - self.ema) * self._penalty + self.ema * penalty
+            prev = self._level_penalty.get(level)
+            self._level_penalty[level] = (
+                penalty if prev is None
+                else (1 - self.ema) * prev + self.ema * penalty)

@@ -96,7 +96,10 @@ class Executor:
                         one scheduling round serves a whole batch).  A policy
                         may also expose a ``budget`` (float): the grab then
                         stops before exceeding that much summed task cost
-                        (token-budget batching).
+                        (token-budget batching).  A policy with a true
+                        ``per_domain`` attribute is sized per source queue
+                        (``size_for(domain)``) and fed with the source
+                        domain (``on_batch(n_tasks, service, domain)``).
     batch_handler:      ``(tasks, worker) -> results`` called with each grab's
                         task list (length 1..batch).  When None, ``handler``
                         is called per task.  Results align with tasks;
@@ -104,6 +107,16 @@ class Executor:
     step_hook:          optional ``(executor) -> None`` fired at the end of
                         every ``step()`` — the control plane's drive point
                         (``repro.control.ControlLoop`` plugs in here).
+    topology:           optional ``repro.topology.DistanceMatrix`` arranging
+                        the domains in a distance tree.  Hierarchical
+                        matrices make every steal scan nearest-first (the
+                        configured ``steal_order`` applies within a tier),
+                        scale each steal's penalty by the link distance
+                        actually crossed, ask the governor for per-level
+                        depth thresholds (``min_victim_depth_at``), and
+                        count cross-tier steals as ``remote_steals``.  A
+                        flat matrix (or None, the default) reproduces the
+                        pre-topology behaviour bit-for-bit.
     """
 
     def __init__(self, num_domains: int,
@@ -120,12 +133,14 @@ class Executor:
                  router: Router | None = None,
                  batch: Any = 1,
                  batch_handler: BatchHandler | None = None,
-                 step_hook: StepHook | None = None):
+                 step_hook: StepHook | None = None,
+                 topology: Any = None):
         self.num_domains = num_domains
         self.seed = seed
         self.rng = np.random.default_rng(seed)
+        self.topology = topology
         self.queues = DomainQueues(num_domains, steal_order=steal_order,
-                                   rng=self.rng)
+                                   rng=self.rng, topology=topology)
         if worker_domains is None:
             worker_domains = list(range(num_domains))
         self.pool = WorkerPool(worker_domains)
@@ -243,6 +258,16 @@ class Executor:
         size = getattr(self.batch, "size", self.batch)
         return max(int(size), 1)
 
+    def _batch_limit(self, domain: int) -> int:
+        """The grab limit for a batch sourced from ``domain``: a batch
+        policy exposing ``size_for(domain)`` (per-queue sizing, e.g.
+        ``BatchGovernor(per_domain=True)``) is consulted per source queue;
+        anything else falls back to the global ``batch_max``."""
+        size_for = getattr(self.batch, "size_for", None)
+        if size_for is not None:
+            return max(int(size_for(domain)), 1)
+        return self.batch_max
+
     def _attempt(self, worker: Worker, inline: bool = False) -> int:
         """One grab by ``worker``: dequeue (local-first, governed steal),
         then drain up to ``batch_max - 1`` more tasks from the same source
@@ -256,6 +281,14 @@ class Executor:
             if mv is None:
                 got = self.queues.dequeue(worker.domain, allow_steal=False)
             else:
+                topo = self.topology
+                if topo is not None and topo.hierarchical:
+                    # per-level thresholds: the governor prices each tier
+                    # separately (AdaptiveSteal's per-level θ, the breaker's
+                    # remote cut); a scalar-only governor repeats its one
+                    # threshold at every tier via the base contract.
+                    mv = [self.governor.min_victim_depth_at(worker, lv)
+                          for lv in range(1, topo.num_levels + 1)]
                 got = self.queues.dequeue(worker.domain, min_victim=mv)
         if got is None:
             worker.stats.idle_polls += 1
@@ -266,14 +299,16 @@ class Executor:
             return 0
         tasks: list[Task] = [got.item]
         if not inline:
-            limit = self.batch_max
+            limit = self._batch_limit(got.domain)
             if limit > 1:
                 tasks += self.queues.drain(
                     got.domain, limit - 1,
                     budget=getattr(self.batch, "budget", None),
                     spent=got.item.cost)
         stolen = got.stolen
-        penalties = [float(self.steal_penalty(t, worker))
+        # a steal's penalty is scaled by the link distance it crossed
+        # (1.0 for flat/no topology — bit-identical to the uniform-hop rule)
+        penalties = [float(self.steal_penalty(t, worker)) * got.distance
                      if stolen and self.steal_penalty is not None else 0.0
                      for t in tasks]
         if self.batch_handler is not None:
@@ -285,13 +320,16 @@ class Executor:
         else:
             results = [self.handler(t, worker) for t in tasks]
         kind = "inline" if inline else ("steal" if stolen else "run")
+        remote = stolen and got.level >= 2
         for task, penalty, result in zip(tasks, penalties, results):
             local = not stolen and task.home == worker.domain
             worker.stats.executed += 1
             worker.stats.local += int(local)
             worker.stats.stolen += int(stolen)
-            self.metrics.on_execute(local, stolen, penalty, inline)
-            self.governor.on_execute(worker, stolen, penalty, task.cost)
+            self.metrics.on_execute(local, stolen, penalty, inline,
+                                    remote=remote)
+            self.governor.on_execute(worker, stolen, penalty, task.cost,
+                                     level=got.level)
             self._emit(kind, worker=worker.wid, domain=worker.domain,
                        task_uid=task.uid, src_domain=got.domain,
                        cost=task.cost, penalty=penalty)
@@ -300,7 +338,10 @@ class Executor:
         on_batch = getattr(self.batch, "on_batch", None)
         if on_batch is not None and not inline:
             service = sum(t.cost for t in tasks) + sum(penalties)
-            on_batch(len(tasks), service)
+            if getattr(self.batch, "per_domain", False):
+                on_batch(len(tasks), service, got.domain)
+            else:
+                on_batch(len(tasks), service)
         return len(tasks)
 
     def _emit(self, kind: str, worker: int, domain: int, task_uid: int,

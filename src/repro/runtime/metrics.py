@@ -19,6 +19,7 @@ class RuntimeStats:
     executed: int = 0
     local: int = 0           # executed in the task's home domain, not stolen
     stolen: int = 0          # executed from a foreign queue
+    remote_steals: int = 0   # steals that crossed a topology tier (level >= 2)
     inline_runs: int = 0     # executed by the submitter under backpressure
     idle_polls: int = 0      # dequeue attempts that found nothing eligible
     steal_penalty: float = 0.0   # accumulated nonlocal-access cost
@@ -31,6 +32,12 @@ class RuntimeStats:
     @property
     def steal_fraction(self) -> float:
         return self.stolen / max(self.executed, 1)
+
+    @property
+    def remote_fraction(self) -> float:
+        """Cross-tier (level >= 2) steals over executed tasks — always 0 on
+        flat machines, the quantity the topology benchmark minimizes."""
+        return self.remote_steals / max(self.executed, 1)
 
 
 class MetricsRecorder:
@@ -46,13 +53,15 @@ class MetricsRecorder:
         self.stats.max_pool_depth = max(self.stats.max_pool_depth, pool_depth)
 
     def on_execute(self, local: bool, stolen: bool, penalty: float,
-                   inline: bool) -> None:
+                   inline: bool, remote: bool = False) -> None:
         self.stats.executed += 1
         if local:
             self.stats.local += 1
         if stolen:
             self.stats.stolen += 1
             self.stats.steal_penalty += penalty
+            if remote:
+                self.stats.remote_steals += 1
         if inline:
             self.stats.inline_runs += 1
 
@@ -73,6 +82,7 @@ class MetricsRecorder:
             "executed": s.executed,
             "local": s.local,
             "stolen": s.stolen,
+            "remote_steals": s.remote_steals,
             "inline_runs": s.inline_runs,
             "idle_polls": s.idle_polls,
             "steal_penalty": s.steal_penalty,

@@ -25,6 +25,17 @@ Four steal scans are supported:
                       the most queued *work*, not the most queued *items*
                       (the ``repro.control`` cost-aware victim selection).
 
+With a hierarchical ``repro.topology.DistanceMatrix`` attached, every scan
+becomes *nearest-first*: victims are sought level by level (same socket,
+then cross socket, then cross pod) and the configured order applies only
+*within* a level — the paper's dynamic-scheduling-inside-a-domain invariant
+is preserved per tier, while a worker never pays a deep-link steal when a
+sibling still has eligible work.  ``min_victim`` may then be a per-level
+sequence (the adaptive governor's per-level θ; a ``None`` entry forbids
+that tier outright).  A flat (or absent) topology takes the original
+single-tier code path untouched, RNG draws and all — flat runs are
+bit-identical to the pre-topology runtime.
+
 Queued cost is tracked per domain on every enqueue/dequeue (``cost`` /
 ``queue_costs``), so cost-aware routing and victim selection are O(domains)
 reads, never a queue walk.
@@ -40,18 +51,27 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any, Optional
+from typing import Any, Optional, Sequence, Union
 
 import numpy as np
+
+MinVictim = Union[int, Sequence[Optional[int]]]
 
 
 @dataclasses.dataclass(frozen=True)
 class Popped:
-    """Result of a ``DomainQueues.dequeue``."""
+    """Result of a ``DomainQueues.dequeue``.
+
+    ``level``/``distance`` locate the steal in the topology: 0/0.0 for a
+    local pop, the victim's tier and link cost for a steal (1/1.0 when no
+    topology is attached — the flat machine's uniform hop).
+    """
 
     item: Any
     domain: int        # queue the item came from
     stolen: bool       # True when it came from a foreign queue
+    level: int = 0     # topology tier of the steal (0 = local)
+    distance: float = 0.0   # link cost scale of the steal (0.0 = local)
 
 
 class DomainQueues:
@@ -60,7 +80,8 @@ class DomainQueues:
     STEAL_ORDERS = ("cyclic", "longest", "random", "cost_weighted")
 
     def __init__(self, num_domains: int, steal_order: str = "cyclic",
-                 rng: np.random.Generator | None = None):
+                 rng: np.random.Generator | None = None,
+                 topology=None):
         if num_domains < 1:
             raise ValueError("need at least one domain")
         if steal_order not in self.STEAL_ORDERS:
@@ -68,8 +89,13 @@ class DomainQueues:
                              f"(want one of {self.STEAL_ORDERS})")
         if steal_order == "random" and rng is None:
             raise ValueError("steal_order='random' needs an rng")
+        if topology is not None and topology.num_domains != num_domains:
+            raise ValueError(
+                f"topology covers {topology.num_domains} domains, "
+                f"queues have {num_domains}")
         self.num_domains = num_domains
         self.steal_order = steal_order
+        self.topology = topology
         self._rng = rng
         self._queues: list[deque[Any]] = [deque() for _ in range(num_domains)]
         self._costs: list[float] = [0.0] * num_domains
@@ -87,21 +113,30 @@ class DomainQueues:
 
     # -- consumer side -----------------------------------------------------
     def dequeue(self, domain: int, *, allow_steal: bool = True,
-                min_victim: int = 1) -> Optional[Popped]:
+                min_victim: MinVictim = 1) -> Optional[Popped]:
         """Pop the oldest local item; steal from a foreign queue otherwise.
 
         ``min_victim`` throttles stealing: only victims holding at least
         that many items are eligible (1 = the paper's greedy behaviour;
-        larger values are the adaptive governor's depth threshold).
+        larger values are the adaptive governor's depth threshold).  With a
+        hierarchical topology it may be a per-level sequence — entry
+        ``level-1`` gates that tier, ``None`` forbids it (the breaker's
+        remote cut); a short sequence extends with its last entry.
         """
         if self._queues[domain]:
             return Popped(self._pop(domain), domain, False)
         if not allow_steal:
             return None
-        victim = self._pick_victim(domain, max(min_victim, 1))
+        victim = self._pick_victim(domain, min_victim)
         if victim is None:
             return None
-        return Popped(self._pop(victim), victim, True)
+        topo = self.topology
+        if topo is None:
+            level, dist = 1, 1.0
+        else:
+            level, dist = topo.level(domain, victim), topo.distance(domain,
+                                                                    victim)
+        return Popped(self._pop(victim), victim, True, level, dist)
 
     def _pop(self, domain: int) -> Any:
         item = self._queues[domain].popleft()
@@ -137,17 +172,63 @@ class DomainQueues:
             n -= 1
         return out
 
-    def _pick_victim(self, domain: int, min_victim: int) -> Optional[int]:
+    @staticmethod
+    def _level_min(min_victim: MinVictim, level: int) -> Optional[int]:
+        """The depth threshold gating ``level`` (1-based): scalar thresholds
+        apply to every tier; sequences index ``level - 1`` and extend with
+        their last entry.  ``None`` forbids the tier."""
+        if min_victim is None or isinstance(min_victim, int):
+            return min_victim
+        if not len(min_victim):
+            return None
+        return min_victim[min(level - 1, len(min_victim) - 1)]
+
+    def _pick_victim(self, domain: int, min_victim: MinVictim) -> Optional[int]:
+        topo = self.topology
+        if topo is not None and topo.hierarchical:
+            return self._pick_victim_nearest(domain, min_victim, topo)
+        # flat (or no) topology: the original single-tier scan, unchanged —
+        # same visit order and the same RNG draw sequence, so flat runs are
+        # bit-identical to the pre-topology runtime.
+        mv = self._level_min(min_victim, 1)
+        if mv is None:
+            return None
+        mv = max(mv, 1)
         if self.steal_order == "cyclic":
             for off in range(1, self.num_domains):
                 d = (domain + off) % self.num_domains
-                if len(self._queues[d]) >= min_victim:
+                if len(self._queues[d]) >= mv:
                     return d
             return None
         eligible = [d for d in range(self.num_domains)
-                    if d != domain and len(self._queues[d]) >= min_victim]
+                    if d != domain and len(self._queues[d]) >= mv]
         if not eligible:
             return None
+        return self._pick_eligible(eligible)
+
+    def _pick_victim_nearest(self, domain: int, min_victim: MinVictim,
+                             topo) -> Optional[int]:
+        """Nearest-first scan: tiers visited in ascending distance order,
+        the configured steal order applied only within a tier."""
+        for level in range(1, topo.num_levels + 1):
+            mv = self._level_min(min_victim, level)
+            if mv is None:
+                continue
+            mv = max(mv, 1)
+            if self.steal_order == "cyclic":
+                for d in topo.cyclic_peers(domain, level):
+                    if len(self._queues[d]) >= mv:
+                        return d
+                continue
+            eligible = [d for d in topo.peers(domain, level)
+                        if len(self._queues[d]) >= mv]
+            if eligible:
+                return self._pick_eligible(eligible)
+        return None
+
+    def _pick_eligible(self, eligible: list[int]) -> int:
+        """Resolve a non-cyclic steal order over an eligible-victim list (a
+        single tier's, or the whole machine's when flat)."""
         if self.steal_order == "longest":
             return max(eligible, key=lambda d: (len(self._queues[d]), -d))
         if self.steal_order == "cost_weighted":

@@ -37,29 +37,35 @@ Raw constructor kwargs on ``Executor``/``ServingEngine`` remain as a thin
 deprecated path for callables and tests; new configurations should be
 specs (a JSON file, not a code change).
 """
-from .build import Built, build, build_governor, build_penalty, checkpoint
+from .build import (Built, build, build_governor, build_penalty,
+                    build_topology, checkpoint)
 from .experiments import (EXPERIMENT_VERSION, CostsSpec, ExperimentResult,
                           ExperimentSpec, RunResult, SkewSpec, WorkloadSpec,
                           control_experiments, control_workloads,
                           dump_experiment, experiment, experiment_names,
                           load_experiment, replay_experiments,
                           replay_workloads, runtime_experiments,
-                          runtime_workloads, standard_workloads)
-from .model import (SPEC_VERSION, BatchSpec, BreakerSpec, GovernorSpec,
-                    GovernorStateSpec, PenaltySpec, RouterSpec, RuntimeSpec,
-                    ServingSpec, SpecError, TraceSpec, dump, load)
+                          runtime_workloads, standard_workloads,
+                          topology_experiments, topology_workloads)
+from .model import (SPEC_VERSION, BatchSpec, BatchStateSpec, BreakerSpec,
+                    BreakerStateSpec, GovernorSpec, GovernorStateSpec,
+                    PenaltySpec, RouterSpec, RuntimeSpec, ServingSpec,
+                    SpecError, TopologySpec, TraceSpec, dump, load)
 from .registry import named, policy_names
 
 __all__ = [
-    "Built", "build", "build_governor", "build_penalty", "checkpoint",
+    "Built", "build", "build_governor", "build_penalty", "build_topology",
+    "checkpoint",
     "EXPERIMENT_VERSION", "CostsSpec", "ExperimentResult", "ExperimentSpec",
     "RunResult", "SkewSpec", "WorkloadSpec",
     "control_experiments", "control_workloads", "dump_experiment",
     "experiment", "experiment_names", "load_experiment",
     "replay_experiments", "replay_workloads", "runtime_experiments",
     "runtime_workloads", "standard_workloads",
-    "SPEC_VERSION", "BatchSpec", "BreakerSpec", "GovernorSpec",
-    "GovernorStateSpec", "PenaltySpec", "RouterSpec", "RuntimeSpec",
-    "ServingSpec", "SpecError", "TraceSpec", "dump", "load",
+    "topology_experiments", "topology_workloads",
+    "SPEC_VERSION", "BatchSpec", "BatchStateSpec", "BreakerSpec",
+    "BreakerStateSpec", "GovernorSpec", "GovernorStateSpec", "PenaltySpec",
+    "RouterSpec", "RuntimeSpec", "ServingSpec", "SpecError", "TopologySpec",
+    "TraceSpec", "dump", "load",
     "named", "policy_names",
 ]

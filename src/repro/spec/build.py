@@ -33,8 +33,11 @@ from typing import Any, Callable, Optional
 
 from ..runtime import (AdaptiveSteal, Executor, GreedySteal, NoSteal,
                        StealGovernor, Task, Worker)
+from ..topology import DistanceMatrix, flat as flat_topology
+from ..topology import grouped as grouped_topology
+from ..topology import pods as pods_topology
 from .model import (BatchSpec, GovernorSpec, PenaltySpec, RouterSpec,
-                    RuntimeSpec, SpecError)
+                    RuntimeSpec, SpecError, TopologySpec)
 
 
 @dataclasses.dataclass
@@ -92,28 +95,79 @@ def build_governor(spec: GovernorSpec) -> StealGovernor:
     if st is not None and spec.kind == "measured":
         gov.observed_local = st.observed_local
         gov.observed_steals = st.observed_steals
+    if st is not None and st.level_penalties is not None:
+        gov.seed_level_penalties(dict(st.level_penalties))
     return gov
+
+
+def build_topology(spec: Optional[TopologySpec],
+                   num_domains: int) -> Optional[DistanceMatrix]:
+    """The ``DistanceMatrix`` a ``TopologySpec`` names (None when the spec
+    declares none — the executor then runs the original flat steal scan)."""
+    if spec is None:
+        return None
+    declared = spec.declared_domains()
+    if declared is not None and declared != num_domains:
+        raise SpecError(f"topology declares {declared} domains but the "
+                        f"runtime has {num_domains}")
+    if spec.kind == "flat":
+        return flat_topology(num_domains, distance=spec.near)
+    if spec.kind == "grouped":
+        return grouped_topology(list(spec.groups), near=spec.near,
+                                far=spec.far)
+    return pods_topology(spec.num_pods, spec.domains_per_pod, near=spec.near)
 
 
 def checkpoint(executor: Executor) -> RuntimeSpec:
     """Snapshot a running spec-built system back into a ``RuntimeSpec``.
 
-    Returns the executor's own spec with the governor's learned θ state
-    folded in as a ``GovernorStateSpec`` — the declarative mid-run
-    checkpoint: serialize it, and ``build()`` elsewhere reconstructs the
-    exact estimator without re-reading any trace.  Requires a spec-built
-    executor (``executor.spec`` set) whose governor carries learned state
-    (adaptive/measured kinds).
+    Returns the executor's own spec with every learned/warm block folded
+    back in declaratively — the mid-run checkpoint: serialize it, and
+    ``build()`` elsewhere resumes the exact estimators without re-reading
+    any trace.  Captured when present:
+
+      * governor θ state (``GovernorStateSpec``, incl. per-level penalty
+        EMAs) for adaptive/measured kinds;
+      * breaker cool-downs and trip counters (``BreakerStateSpec``) when
+        the spec declares a breaker;
+      * batch-governor service EMAs — global and per-domain — and current
+        size (``BatchStateSpec``) when the batch is governed.
+
+    Requires a spec-built executor (``executor.spec`` set) with at least
+    one stateful block; a fully static system (greedy/none governor, fixed
+    batch, no breaker) has nothing learned to snapshot and raises.
     """
-    from .model import GovernorStateSpec
+    from .model import BatchStateSpec, BreakerStateSpec, GovernorStateSpec
     spec = getattr(executor, "spec", None)
     if spec is None:
         raise SpecError(
             "checkpoint needs a spec-built executor (executor.spec is None: "
             "raw-kwarg construction or a build-time override)")
-    state = GovernorStateSpec.from_governor(executor.governor)
-    return dataclasses.replace(
-        spec, governor=dataclasses.replace(spec.governor, state=state))
+    has_breaker = spec.governor.breaker is not None
+    has_batch = spec.batch.kind == "governed"
+    if not has_breaker and not has_batch:
+        # governor state is the only candidate; let its snapshot raise the
+        # canonical "no learned state" error for fully static systems
+        state = GovernorStateSpec.from_governor(executor.governor)
+        return dataclasses.replace(
+            spec, governor=dataclasses.replace(spec.governor, state=state))
+    try:
+        gov_state = GovernorStateSpec.from_governor(executor.governor)
+    except SpecError:
+        gov_state = None           # greedy/none inner: nothing learned
+    new_gov = spec.governor
+    if gov_state is not None:
+        new_gov = dataclasses.replace(new_gov, state=gov_state)
+    if has_breaker:
+        b_state = BreakerStateSpec.from_breaker(executor.governor)
+        new_gov = dataclasses.replace(
+            new_gov, breaker=dataclasses.replace(new_gov.breaker,
+                                                 state=b_state))
+    new_batch = spec.batch
+    if has_batch:
+        new_batch = dataclasses.replace(
+            new_batch, state=BatchStateSpec.from_governor(executor.batch))
+    return dataclasses.replace(spec, governor=new_gov, batch=new_batch)
 
 
 def _needs_control(spec: RuntimeSpec) -> bool:
@@ -153,6 +207,7 @@ def build(spec: RuntimeSpec, *,
         event_maxlen=spec.event_maxlen,
         batch=batch,
         batch_handler=batch_handler,
+        topology=build_topology(spec.topology, spec.num_domains),
     )
 
     control = None
@@ -162,22 +217,33 @@ def build(spec: RuntimeSpec, *,
         router = None
         if spec.router.kind == "cost":
             router = CostRouter(spill_penalty=spec.router.spill_penalty,
-                                measured=spec.router.spill == "measured")
+                                measured=spec.router.spill == "measured",
+                                breaker_aware=spec.router.breaker_aware)
         batcher = None
         if spec.batch.kind == "governed":
             b = spec.batch
             batcher = BatchGovernor(target_service=b.target_service,
                                     batch_min=b.batch_min,
                                     batch_cap=b.batch_cap, ema=b.ema,
-                                    init_size=b.init_size)
+                                    init_size=b.init_size,
+                                    per_domain=b.per_domain)
+            if b.state is not None:
+                batcher.seed_state(
+                    service_estimate=b.state.service_estimate,
+                    size=b.state.size,
+                    domain_estimates=(None if b.state.domain_estimates is None
+                                      else dict(b.state.domain_estimates)))
         breaker = None
         if spec.governor.breaker is not None:
             k = spec.governor.breaker
             breaker = StormBreaker(width=k.width, steal_frac=k.steal_frac,
                                    inline_frac=k.inline_frac,
+                                   remote_frac=k.remote_frac,
                                    min_executed=k.min_executed,
                                    cooldown=k.cooldown, mode=k.mode,
                                    boost=k.boost)
+            if k.state is not None:
+                breaker.seed_state(**k.state.to_dict())
         control = ControlLoop(router=router, batcher=batcher, breaker=breaker)
         control.attach(ex)
     if spec.router.kind == "round_robin":

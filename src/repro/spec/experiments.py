@@ -433,6 +433,29 @@ def control_experiments(steps: int = 48,
             for name, wl in control_workloads(steps=steps, seed=seed).items()}
 
 
+def topology_workloads(steps: int = 48, seed: int = 0,
+                       num_domains: int = 8) -> dict[str, WorkloadSpec]:
+    """``benchmarks.topology_locality``'s scenarios: the storm-prone
+    hot-skew and bursty arrivals scaled up to the 8-domain two-socket/pod
+    machine the topology policies declare."""
+    std = standard_workloads(num_domains, steps, seed)
+    return {name: std[name] for name in ("hot_skew", "bursty")}
+
+
+def topology_experiments(steps: int = 48,
+                         seed: int = 0) -> dict[str, ExperimentSpec]:
+    """The flat-vs-hierarchical matrix: each topology policy (flat
+    baseline, two-level sockets, adaptive pods) on each topology workload
+    — the declarative arms of ``benchmarks.topology_locality``."""
+    reg: dict[str, ExperimentSpec] = {}
+    for pol in ("topology_flat", "topology_two_level",
+                "topology_pods_adaptive"):
+        policy = dataclasses.replace(named(pol), seed=seed)
+        for name, wl in topology_workloads(steps=steps, seed=seed).items():
+            reg[f"{pol}_{name}"] = ExperimentSpec(policy=policy, workload=wl)
+    return reg
+
+
 def _build_registry() -> dict[str, ExperimentSpec]:
     reg: dict[str, ExperimentSpec] = {}
     for name, wl in standard_workloads().items():
@@ -443,6 +466,7 @@ def _build_registry() -> dict[str, ExperimentSpec]:
         reg[f"replay_{name}"] = exp
     for name, exp in control_experiments().items():
         reg[f"control_{name}"] = exp
+    reg.update(topology_experiments())
     return reg
 
 

@@ -129,33 +129,108 @@ class PenaltySpec:
         return _construct(cls, _coerce_scalars(cls, d, where), where)
 
 
+def _int_float_pairs(value, where: str):
+    """Parse/normalize a ``[[int, float], ...]`` pair list (JSON form of the
+    small int-keyed estimate maps the state specs carry); returns a tuple of
+    ``(int, float)`` pairs, or None for None/empty."""
+    if value is None:
+        return None
+    if not isinstance(value, (list, tuple)):
+        raise SpecError(f"{where}: expected a list of [int, number] pairs, "
+                        f"got {type(value).__name__}")
+    out = []
+    for item in value:
+        ok = (isinstance(item, (list, tuple)) and len(item) == 2
+              and not isinstance(item[0], bool) and isinstance(item[0], int)
+              and not isinstance(item[1], bool)
+              and isinstance(item[1], (int, float)))
+        if not ok:
+            raise SpecError(f"{where}: expected [int, number] pairs, "
+                            f"got {item!r}")
+        out.append((int(item[0]), float(item[1])))
+    return tuple(out) if out else None
+
+
+@dataclasses.dataclass(frozen=True)
+class BreakerStateSpec:
+    """Warm ``control.StormBreaker`` state: remaining cooldown windows and
+    episode counters, so ``spec.checkpoint()`` restores a breaker
+    mid-cooldown instead of silently re-arming it."""
+
+    cooldown_left: int = 0
+    remote_cooldown_left: int = 0
+    trips: int = 0
+    remote_trips: int = 0
+
+    def __post_init__(self):
+        for f in dataclasses.fields(self):
+            _require(getattr(self, f.name) >= 0,
+                     f"breaker.state.{f.name} must be >= 0")
+
+    @classmethod
+    def from_breaker(cls, breaker) -> "BreakerStateSpec":
+        """Snapshot a live ``control.StormBreaker``'s warm state."""
+        state = getattr(breaker, "breaker_state", None)
+        if state is None:
+            raise SpecError(
+                f"{type(breaker).__name__} is no StormBreaker "
+                "(no breaker_state to snapshot)")
+        return cls(**state())
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"cooldown_left": self.cooldown_left,
+                "remote_cooldown_left": self.remote_cooldown_left,
+                "trips": self.trips, "remote_trips": self.remote_trips}
+
+    @classmethod
+    def from_dict(cls, d: dict,
+                  where: str = "breaker.state") -> "BreakerStateSpec":
+        _reject_unknown(cls, d, where)
+        return _construct(cls, _coerce_scalars(cls, d, where), where)
+
+
 @dataclasses.dataclass(frozen=True)
 class BreakerSpec:
-    """``repro.control.StormBreaker`` parameters (governor decoration)."""
+    """``repro.control.StormBreaker`` parameters (governor decoration).
+
+    ``remote_frac`` is the cross-tier steal fraction that trips the
+    breaker's remote-only state under a hierarchical topology (flat
+    machines never produce remote steals, so it is inert there).
+    ``state`` restores a checkpointed breaker's cooldowns warm.
+    """
 
     width: int = 8
     steal_frac: float = 0.5
     inline_frac: float = 0.25
+    remote_frac: float = 0.25
     min_executed: int = 4
     cooldown: int = 3
     mode: str = "raise"
     boost: int = 8
+    state: Optional[BreakerStateSpec] = None
 
     def __post_init__(self):
         _require(self.width >= 1, "breaker.width must be >= 1")
         _require(self.mode in ("raise", "block"),
                  f"breaker.mode {self.mode!r} not in ('raise', 'block')")
+        _require(self.remote_frac > 0, "breaker.remote_frac must be > 0")
 
     def to_dict(self) -> dict[str, Any]:
         return {"width": self.width, "steal_frac": self.steal_frac,
                 "inline_frac": self.inline_frac,
+                "remote_frac": self.remote_frac,
                 "min_executed": self.min_executed, "cooldown": self.cooldown,
-                "mode": self.mode, "boost": self.boost}
+                "mode": self.mode, "boost": self.boost,
+                "state": None if self.state is None else self.state.to_dict()}
 
     @classmethod
     def from_dict(cls, d: dict, where: str = "breaker") -> "BreakerSpec":
         _reject_unknown(cls, d, where)
-        return _construct(cls, _coerce_scalars(cls, d, where), where)
+        kw = _coerce_scalars(cls, d, where)
+        st = kw.pop("state", None)
+        kw["state"] = (None if st is None
+                       else BreakerStateSpec.from_dict(st, f"{where}.state"))
+        return _construct(cls, kw, where)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -181,6 +256,7 @@ class GovernorStateSpec:
     task_cost: float = 1.0
     observed_local: int = 0
     observed_steals: int = 0
+    level_penalties: Optional[tuple[tuple[int, float], ...]] = None
 
     def __post_init__(self):
         _require(self.penalty_estimate >= 0.0,
@@ -189,11 +265,22 @@ class GovernorStateSpec:
                  "governor.state.task_cost must be positive")
         _require(self.observed_local >= 0 and self.observed_steals >= 0,
                  "governor.state observation counts must be >= 0")
+        if self.level_penalties is not None:
+            lp = _int_float_pairs(self.level_penalties,
+                                  "governor.state.level_penalties")
+            if lp is not None:
+                for lv, est in lp:
+                    _require(lv >= 1 and est >= 0.0,
+                             "governor.state.level_penalties entries need "
+                             "level >= 1 and estimate >= 0")
+            object.__setattr__(self, "level_penalties", lp)
 
     @classmethod
     def from_governor(cls, governor) -> "GovernorStateSpec":
         """Snapshot a live governor's learned estimates (unwrapping a
-        ``control.StormBreaker`` decoration to its inner governor)."""
+        ``control.StormBreaker`` decoration to its inner governor),
+        including any per-topology-tier penalty EMAs a hierarchical run
+        taught it."""
         inner = getattr(governor, "inner", None)
         if inner is not None:
             governor = inner
@@ -201,17 +288,23 @@ class GovernorStateSpec:
             raise SpecError(
                 f"governor {type(governor).__name__} carries no learned "
                 "state to snapshot (only adaptive/measured governors do)")
+        levels = getattr(governor, "level_penalty_estimates", None)
+        by_level = sorted(levels().items()) if levels is not None else []
         return cls(penalty_estimate=float(governor.penalty_estimate),
                    task_cost=float(governor.task_cost),
                    observed_local=int(getattr(governor, "observed_local", 0)),
                    observed_steals=int(getattr(governor,
-                                               "observed_steals", 0)))
+                                               "observed_steals", 0)),
+                   level_penalties=tuple(by_level) or None)
 
     def to_dict(self) -> dict[str, Any]:
         return {"penalty_estimate": self.penalty_estimate,
                 "task_cost": self.task_cost,
                 "observed_local": self.observed_local,
-                "observed_steals": self.observed_steals}
+                "observed_steals": self.observed_steals,
+                "level_penalties": (None if self.level_penalties is None
+                                    else [list(p)
+                                          for p in self.level_penalties])}
 
     @classmethod
     def from_dict(cls, d: dict,
@@ -302,6 +395,11 @@ class RouterSpec:
                       ``MeasuredPenalty``), falling back to
                       ``spill_penalty`` until one exists — the ROADMAP's
                       "price the spill threshold from measurements".
+
+    ``breaker_aware`` (kind ``cost`` only) makes the router consult the
+    executor's ``StormBreaker``: while the breaker is tripped, homed tasks
+    are never spilled (remote-only trips only suspend cross-tier spills) —
+    routing must not re-feed the storm the breaker is quenching.
     """
 
     KINDS = ("none", "round_robin", "cost")
@@ -309,19 +407,74 @@ class RouterSpec:
     kind: str = "none"
     spill_penalty: Optional[float] = 4.0
     spill: str = "static"
+    breaker_aware: bool = False
 
     def __post_init__(self):
         _require(self.kind in self.KINDS,
                  f"router.kind {self.kind!r} not in {self.KINDS}")
         _require(self.spill in ("static", "measured"),
                  f"router.spill {self.spill!r} not in ('static', 'measured')")
+        _require(not (self.breaker_aware and self.kind != "cost"),
+                 "router.breaker_aware requires kind 'cost'")
 
     def to_dict(self) -> dict[str, Any]:
         return {"kind": self.kind, "spill_penalty": self.spill_penalty,
-                "spill": self.spill}
+                "spill": self.spill, "breaker_aware": self.breaker_aware}
 
     @classmethod
     def from_dict(cls, d: dict, where: str = "router") -> "RouterSpec":
+        _reject_unknown(cls, d, where)
+        return _construct(cls, _coerce_scalars(cls, d, where), where)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchStateSpec:
+    """Warm ``control.BatchGovernor`` state: the learned service EMAs (the
+    global one and, under ``per_domain``, each queue's own) plus the
+    current size, so a checkpointed governor resumes sizing from its
+    measurements instead of re-warming from ``init_size``."""
+
+    service_estimate: Optional[float] = None
+    size: Optional[int] = None
+    domain_estimates: Optional[tuple[tuple[int, float], ...]] = None
+
+    def __post_init__(self):
+        _require(self.service_estimate is None or self.service_estimate > 0,
+                 "batch.state.service_estimate must be > 0 (or null)")
+        _require(self.size is None or self.size >= 1,
+                 "batch.state.size must be >= 1 (or null)")
+        if self.domain_estimates is not None:
+            de = _int_float_pairs(self.domain_estimates,
+                                  "batch.state.domain_estimates")
+            if de is not None:
+                for dom, est in de:
+                    _require(dom >= 0 and est > 0,
+                             "batch.state.domain_estimates entries need "
+                             "domain >= 0 and estimate > 0")
+            object.__setattr__(self, "domain_estimates", de)
+
+    @classmethod
+    def from_governor(cls, batcher) -> "BatchStateSpec":
+        """Snapshot a live ``control.BatchGovernor``'s learned state."""
+        if not hasattr(batcher, "service_estimate"):
+            raise SpecError(
+                f"{type(batcher).__name__} is no BatchGovernor "
+                "(no service_estimate to snapshot)")
+        domains = sorted(batcher.domain_service_estimates().items())
+        return cls(service_estimate=batcher.service_estimate,
+                   size=int(batcher.size),
+                   domain_estimates=tuple(domains) or None)
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"service_estimate": self.service_estimate,
+                "size": self.size,
+                "domain_estimates": (None if self.domain_estimates is None
+                                     else [list(p)
+                                           for p in self.domain_estimates])}
+
+    @classmethod
+    def from_dict(cls, d: dict,
+                  where: str = "batch.state") -> "BatchStateSpec":
         _reject_unknown(cls, d, where)
         return _construct(cls, _coerce_scalars(cls, d, where), where)
 
@@ -335,6 +488,11 @@ class BatchSpec:
     ``governed`` — ``control.BatchGovernor(target_service, batch_min,
                    batch_cap, ema, init_size)``: budgeted continuous
                    batching adapted from measured per-batch service.
+
+    ``per_domain`` (governed only) keeps one service EMA per source queue
+    under the same global ``target_service`` budget, so each queue's grab
+    width tracks its own cost mix.  ``state`` restores a checkpointed
+    governor's EMAs warm.
     """
 
     KINDS = ("fixed", "governed")
@@ -346,6 +504,8 @@ class BatchSpec:
     batch_cap: int = 8
     ema: float = 0.25
     init_size: int = 1
+    per_domain: bool = False
+    state: Optional[BatchStateSpec] = None
 
     def __post_init__(self):
         _require(self.kind in self.KINDS,
@@ -354,17 +514,27 @@ class BatchSpec:
         _require(self.target_service > 0, "batch.target_service must be > 0")
         _require(1 <= self.batch_min <= self.batch_cap,
                  "need 1 <= batch.batch_min <= batch.batch_cap")
+        _require(not (self.per_domain and self.kind != "governed"),
+                 "batch.per_domain requires kind 'governed'")
+        _require(self.state is None or self.kind == "governed",
+                 "batch.state requires kind 'governed' (nothing to restore)")
 
     def to_dict(self) -> dict[str, Any]:
         return {"kind": self.kind, "size": self.size,
                 "target_service": self.target_service,
                 "batch_min": self.batch_min, "batch_cap": self.batch_cap,
-                "ema": self.ema, "init_size": self.init_size}
+                "ema": self.ema, "init_size": self.init_size,
+                "per_domain": self.per_domain,
+                "state": None if self.state is None else self.state.to_dict()}
 
     @classmethod
     def from_dict(cls, d: dict, where: str = "batch") -> "BatchSpec":
         _reject_unknown(cls, d, where)
-        return _construct(cls, _coerce_scalars(cls, d, where), where)
+        kw = _coerce_scalars(cls, d, where)
+        st = kw.pop("state", None)
+        kw["state"] = (None if st is None
+                       else BatchStateSpec.from_dict(st, f"{where}.state"))
+        return _construct(cls, kw, where)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -428,6 +598,81 @@ class ServingSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """Locality-domain distance tree (``repro.topology.DistanceMatrix``).
+
+    ``flat``    — every pair of domains one ``near`` hop apart: the seed
+                  repo's implicit machine, kept bit-identical (no topology
+                  block and a flat block build the same executor).
+    ``grouped`` — a two-level socket/domain tree: ``groups`` lists the
+                  domain count per socket; intra-socket links cost ``near``,
+                  cross-socket links ``far``.
+    ``pods``    — ``num_pods`` pods of ``domains_per_pod`` domains with the
+                  cross-pod distance derived from
+                  ``core.topology.tpu_topology``'s ``remote_factor``
+                  (``far = near / remote_factor``); ``far`` is ignored.
+    """
+
+    KINDS = ("flat", "grouped", "pods")
+
+    kind: str = "flat"
+    groups: Optional[tuple[int, ...]] = None
+    num_pods: int = 2
+    domains_per_pod: int = 2
+    near: float = 1.0
+    far: float = 4.0
+
+    def __post_init__(self):
+        _require(self.kind in self.KINDS,
+                 f"topology.kind {self.kind!r} not in {self.KINDS}")
+        _require(self.near > 0, "topology.near must be > 0")
+        _require(self.far >= self.near,
+                 "topology.far must be >= topology.near")
+        _require(self.num_pods >= 1, "topology.num_pods must be >= 1")
+        _require(self.domains_per_pod >= 1,
+                 "topology.domains_per_pod must be >= 1")
+        if self.kind == "grouped":
+            gs = self.groups
+            if (not isinstance(gs, (list, tuple)) or not gs
+                    or any(isinstance(g, bool) or not isinstance(g, int)
+                           or g < 1 for g in gs)):
+                raise SpecError("topology.groups must be a non-empty list of "
+                                f"positive ints for kind 'grouped', got {gs!r}")
+            object.__setattr__(self, "groups", tuple(int(g) for g in gs))
+        else:
+            _require(self.groups is None,
+                     f"topology.groups only applies to kind 'grouped'")
+
+    def declared_domains(self) -> Optional[int]:
+        """Domain count this topology pins (None for flat, which adapts to
+        the owning spec's ``num_domains``)."""
+        if self.kind == "grouped":
+            return sum(self.groups)
+        if self.kind == "pods":
+            return self.num_pods * self.domains_per_pod
+        return None
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"kind": self.kind,
+                "groups": None if self.groups is None else list(self.groups),
+                "num_pods": self.num_pods,
+                "domains_per_pod": self.domains_per_pod,
+                "near": self.near, "far": self.far}
+
+    @classmethod
+    def from_dict(cls, d: dict, where: str = "topology") -> "TopologySpec":
+        _reject_unknown(cls, d, where)
+        kw = _coerce_scalars(cls, d, where)
+        if kw.get("groups") is not None:
+            gs = kw["groups"]
+            if not isinstance(gs, (list, tuple)):
+                raise SpecError(f"{where}.groups: expected a list of ints, "
+                                f"got {gs!r}")
+            kw["groups"] = tuple(gs)
+        return _construct(cls, kw, where)
+
+
+@dataclasses.dataclass(frozen=True)
 class RuntimeSpec:
     """The top of the tree: one value that names a whole runtime system."""
 
@@ -444,9 +689,15 @@ class RuntimeSpec:
     batch: BatchSpec = BatchSpec()
     trace: TraceSpec = TraceSpec()
     serving: Optional[ServingSpec] = None
+    topology: Optional[TopologySpec] = None
 
     def __post_init__(self):
         _require(self.num_domains >= 1, "num_domains must be >= 1")
+        if self.topology is not None:
+            declared = self.topology.declared_domains()
+            _require(declared is None or declared == self.num_domains,
+                     f"topology declares {declared} domains but spec has "
+                     f"num_domains={self.num_domains}")
         _require(self.pool_cap is None or self.pool_cap >= 1,
                  "pool_cap must be >= 1 (or null)")
         if self.worker_domains is not None:
@@ -496,6 +747,8 @@ class RuntimeSpec:
             "trace": self.trace.to_dict(),
             "serving": (None if self.serving is None
                         else self.serving.to_dict()),
+            "topology": (None if self.topology is None
+                         else self.topology.to_dict()),
         }
 
     @classmethod
@@ -526,6 +779,9 @@ class RuntimeSpec:
         if kw.get("serving") is not None:
             kw["serving"] = ServingSpec.from_dict(kw["serving"],
                                                   f"{where}.serving")
+        if kw.get("topology") is not None:
+            kw["topology"] = TopologySpec.from_dict(kw["topology"],
+                                                    f"{where}.topology")
         return _construct(cls, kw, where)
 
     def to_json(self) -> str:

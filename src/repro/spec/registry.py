@@ -33,12 +33,26 @@ builds, and replays).
                        ``examples/control_serving.py``: 2 replicas as
                        locality domains, re-prefill penalty, control plane
                        sized for request streams
+  topology_flat        the topology benchmark's baseline arm: 8 domains on
+                       an explicit *flat* distance tree (distance 1
+                       everywhere) — builds the bit-identical single-level
+                       steal scan, proving the flat TopologySpec is a no-op
+  topology_two_level   the same runtime on a 4+4 socket pair (near 1,
+                       far 4): nearest-first stealing, remote steals pay
+                       the scaled link distance
+  topology_pods_adaptive
+                       the full hierarchical control plane on a 2×4 pod
+                       tree (cross-pod distance from
+                       ``core.topology.tpu_topology``'s remote factor):
+                       adaptive per-level θ, level-aware breaker,
+                       breaker-aware cost routing, per-domain governed
+                       batching
 """
 from __future__ import annotations
 
 from .model import (BatchSpec, BreakerSpec, GovernorSpec, PenaltySpec,
                     RouterSpec, RuntimeSpec, ServingSpec, SpecError,
-                    TraceSpec)
+                    TopologySpec, TraceSpec)
 
 # Benchmark-wide constants these policies share (see benchmarks/
 # runtime_throughput.py and benchmarks/control_plane.py).
@@ -109,6 +123,31 @@ _REGISTRY: dict[str, RuntimeSpec] = {
         router=RouterSpec(kind="cost", spill_penalty=8.0),
         batch=BatchSpec(kind="governed", target_service=24.0, batch_cap=4),
         serving=ServingSpec(num_replicas=2, max_seq=64, policy="locality"),
+    ),
+    "topology_flat": RuntimeSpec(
+        num_domains=8, steal_order="cyclic",
+        penalty=PenaltySpec(kind="constant", value=_REPLAY_PENALTY),
+        governor=GovernorSpec(kind="greedy"),
+        trace=TraceSpec(record=True),
+        topology=TopologySpec(kind="flat"),
+    ),
+    "topology_two_level": RuntimeSpec(
+        num_domains=8, steal_order="cyclic",
+        penalty=PenaltySpec(kind="constant", value=_REPLAY_PENALTY),
+        governor=GovernorSpec(kind="greedy"),
+        trace=TraceSpec(record=True),
+        topology=TopologySpec(kind="grouped", groups=(4, 4), far=4.0),
+    ),
+    "topology_pods_adaptive": RuntimeSpec(
+        num_domains=8, steal_order="cost_weighted",
+        penalty=PenaltySpec(kind="constant", value=_REPLAY_PENALTY),
+        governor=GovernorSpec(kind="adaptive", penalty_hint=_REPLAY_PENALTY,
+                              breaker=BreakerSpec()),
+        router=RouterSpec(kind="cost", spill_penalty=_REPLAY_PENALTY,
+                          breaker_aware=True),
+        batch=BatchSpec(kind="governed", per_domain=True),
+        trace=TraceSpec(record=True),
+        topology=TopologySpec(kind="pods", num_pods=2, domains_per_pod=4),
     ),
 }
 

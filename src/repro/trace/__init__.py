@@ -56,9 +56,11 @@ from .record import TraceRecorder, executor_meta
 from .replay import (ReplayComparison, ReplayResult, TaskTiming,
                      compare_replays, executor_from_meta, executor_from_spec,
                      replay, task_times)
-from .schema import SCHEMA_VERSION, SubmissionRecord, Trace, TraceSchemaError
+from .schema import (SCHEMA_VERSION, SubmissionRecord, Trace,
+                     TraceSchemaError, event_stolen)
 from .storms import (Window, depth_imbalance, detect_inline_bursts,
-                     detect_steal_storms, render_timeline, windows)
+                     detect_remote_storms, detect_steal_storms,
+                     render_timeline, windows)
 from .workloads import (Arrival, Workload, benchmark_waves, bursty, diurnal,
                         drive, hot_skew, lognormal_costs, poisson,
                         standard_scenarios)
@@ -70,8 +72,10 @@ __all__ = [
     "ReplayComparison", "ReplayResult", "TaskTiming", "compare_replays",
     "executor_from_meta", "executor_from_spec", "replay", "task_times",
     "SCHEMA_VERSION", "SubmissionRecord", "Trace", "TraceSchemaError",
+    "event_stolen",
     "Window", "depth_imbalance", "detect_inline_bursts",
-    "detect_steal_storms", "render_timeline", "windows",
+    "detect_remote_storms", "detect_steal_storms", "render_timeline",
+    "windows",
     "Arrival", "Workload", "benchmark_waves", "bursty", "diurnal", "drive",
     "hot_skew", "lognormal_costs", "poisson", "standard_scenarios",
 ]

@@ -88,11 +88,11 @@ class MeasuredPenalty(AdaptiveSteal):
         return self.task_cost
 
     def on_execute(self, worker: Worker, stolen: bool, penalty: float,
-                   cost: float = 1.0) -> None:
+                   cost: float = 1.0, level: int = 1) -> None:
         if stolen:
             self.observed_steals += 1
         else:
             self.observed_local += 1
             self.task_cost = max(
                 (1 - self.ema) * self.task_cost + self.ema * cost, _MIN_COST)
-        super().on_execute(worker, stolen, penalty, cost)
+        super().on_execute(worker, stolen, penalty, cost, level=level)

@@ -51,6 +51,12 @@ def executor_meta(ex: Executor) -> dict:
         "seed": ex.seed,
         "governor": type(ex.governor).__name__,
     }
+    topology = getattr(ex, "topology", None)
+    if topology is not None:
+        # schema v3: the distance matrix the steal scan walked — replay can
+        # rebuild the hierarchical executor from the header alone, spec or
+        # no spec.
+        meta["topology"] = topology.to_dict()
     spec = getattr(ex, "spec", None)
     if spec is not None:
         meta["spec"] = spec.to_dict()

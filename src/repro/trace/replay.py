@@ -56,6 +56,9 @@ GOVERNORS: dict[str, Callable[[], StealGovernor]] = {
 FIDELITY_KEYS = ("submitted", "executed", "local", "stolen", "inline_runs",
                  "idle_polls", "steal_penalty", "max_pool_depth",
                  "local_fraction", "steal_fraction")
+# keys checked only when the recorded footer carries them: v1/v2 traces
+# predate remote-steal accounting, and their absence must not fail replays.
+OPTIONAL_FIDELITY_KEYS = ("remote_steals",)
 
 
 def executor_from_spec(trace: Trace) -> Executor:
@@ -94,6 +97,10 @@ def executor_from_meta(trace: Trace, *,
     ``governor`` (or a full factory that rebuilds the control plane, as
     ``benchmarks.control_plane`` does).  ``steal_penalty``/``handler``/
     ``steal_order`` override the respective knobs for policy A/B replays.
+
+    Schema-v3 headers carry the recorded ``repro.topology.DistanceMatrix``
+    under ``topology``; it is rebuilt and handed to the fresh executor, so
+    hierarchical traces replay their nearest-first steal scans exactly.
     """
     meta = trace.meta
     if governor is None:
@@ -105,6 +112,10 @@ def executor_from_meta(trace: Trace, *,
                 "explicitly (or a factory that rebuilds it)")
         factory = GOVERNORS.get(str(name))
         governor = factory() if factory is not None else None
+    topology = None
+    if meta.get("topology") is not None:
+        from ..topology import DistanceMatrix   # lazy: keep import light
+        topology = DistanceMatrix.from_dict(meta["topology"])
     return Executor(
         int(meta["num_domains"]),
         [int(d) for d in meta["worker_domains"]],
@@ -114,6 +125,7 @@ def executor_from_meta(trace: Trace, *,
         governor=governor,
         steal_penalty=steal_penalty,
         seed=int(meta.get("seed", 0)),
+        topology=topology,
     )
 
 
@@ -172,12 +184,13 @@ class ReplayResult:
     def matches_recorded(self) -> bool:
         """True when the replayed RuntimeStats reproduce the recorded ones
         exactly (the determinism acceptance check)."""
-        rec, got = self.trace.stats, self.stats
-        return all(got.get(k) == rec.get(k) for k in FIDELITY_KEYS)
+        return not self.mismatches()
 
     def mismatches(self) -> dict[str, tuple[Any, Any]]:
         rec, got = self.trace.stats, self.stats
-        return {k: (rec.get(k), got.get(k)) for k in FIDELITY_KEYS
+        keys = FIDELITY_KEYS + tuple(k for k in OPTIONAL_FIDELITY_KEYS
+                                     if k in rec)
+        return {k: (rec.get(k), got.get(k)) for k in keys
                 if got.get(k) != rec.get(k)}
 
     def task_times(self) -> dict[int, TaskTiming]:

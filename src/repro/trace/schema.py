@@ -27,6 +27,11 @@ scheduler did.  It has four record kinds, serialized one-JSON-object-per-line
 format raise instead of silently mis-replaying.  v1 traces (pre-spec
 headers) stay readable — their headers simply carry no ``spec``, so replay
 falls back to ``executor_from_meta`` / an explicit factory, as before v2.
+v2 traces (pre-topology headers) likewise stay readable: no ``topology``
+block simply means the flat machine, which is what every v2 executor was.
+Schema v3 adds the serialized ``repro.topology.DistanceMatrix`` under
+``topology`` when the recorded executor carried one, so a hierarchical
+trace replays bit-identically from its header alone.
 """
 from __future__ import annotations
 
@@ -35,8 +40,8 @@ from typing import Any, Iterable
 
 from ..runtime import Event
 
-SCHEMA_VERSION = 2
-SUPPORTED_SCHEMAS = (1, SCHEMA_VERSION)
+SCHEMA_VERSION = 3
+SUPPORTED_SCHEMAS = (1, 2, SCHEMA_VERSION)
 TRACE_KIND = "repro.runtime-trace"
 
 
@@ -77,6 +82,14 @@ class Trace:
         (schema v2, spec-built executors), or None for v1 / raw-kwarg
         traces.  Parse with ``repro.spec.RuntimeSpec.from_dict``."""
         return self.meta.get("spec")
+
+    @property
+    def topology_dict(self) -> dict[str, Any] | None:
+        """The serialized ``repro.topology.DistanceMatrix`` the recorded
+        executor stole across (schema v3, topology-built executors), or
+        None for flat machines and v1/v2 traces.  Parse with
+        ``repro.topology.DistanceMatrix.from_dict``."""
+        return self.meta.get("topology")
 
     @property
     def experiment_dict(self) -> dict[str, Any] | None:

@@ -28,13 +28,20 @@ import dataclasses
 from typing import Iterable, Sequence
 
 from ..runtime import Event
+from .schema import event_stolen
 
 EXEC_KINDS = ("run", "steal", "inline")
 
 
 @dataclasses.dataclass(frozen=True)
 class Window:
-    """Aggregate of one fixed-width step interval ``[start, start+width)``."""
+    """Aggregate of one fixed-width step interval ``[start, start+width)``.
+
+    ``remote_steals`` counts the subset of executed-from-a-foreign-queue
+    events whose victim sat at topology level >= 2 from the thief (cross
+    socket/pod); it is only populated when ``windows`` is given the
+    run's ``DistanceMatrix`` — flat analyses leave it 0.
+    """
 
     start: int
     width: int
@@ -43,6 +50,7 @@ class Window:
     inlines: int = 0
     idles: int = 0
     submits: int = 0
+    remote_steals: int = 0
 
     @property
     def executed(self) -> int:
@@ -56,21 +64,36 @@ class Window:
     def inline_fraction(self) -> float:
         return self.inlines / max(self.executed, 1)
 
+    @property
+    def remote_fraction(self) -> float:
+        return self.remote_steals / max(self.executed, 1)
 
-def windows(events: Iterable[Event], width: int = 8) -> list[Window]:
-    """Fold an event stream into consecutive step windows of ``width``."""
+
+def windows(events: Iterable[Event], width: int = 8,
+            topology=None) -> list[Window]:
+    """Fold an event stream into consecutive step windows of ``width``.
+
+    With a ``repro.topology.DistanceMatrix`` as ``topology``, each window
+    additionally counts its *remote* steals: execution events that took a
+    task from a queue at distance level >= 2 (cross socket/pod) — the
+    level dimension ``detect_remote_storms`` and the online
+    ``control.StormBreaker`` act on.
+    """
     if width < 1:
         raise ValueError("window width must be >= 1")
     acc: dict[int, dict[str, int]] = {}
     for e in events:
         w = acc.setdefault(e.step // width,
                            {"run": 0, "steal": 0, "inline": 0,
-                            "idle": 0, "submit": 0})
+                            "idle": 0, "submit": 0, "remote": 0})
         if e.kind in w:
             w[e.kind] += 1
+        if (topology is not None and event_stolen(e)
+                and topology.level(e.src_domain, e.domain) >= 2):
+            w["remote"] += 1
     return [Window(start=k * width, width=width, runs=v["run"],
                    steals=v["steal"], inlines=v["inline"], idles=v["idle"],
-                   submits=v["submit"])
+                   submits=v["submit"], remote_steals=v["remote"])
             for k, v in sorted(acc.items())]
 
 
@@ -80,6 +103,19 @@ def detect_steal_storms(events: Iterable[Event], width: int = 8,
     enough ran for the fraction to mean anything)."""
     return [w for w in windows(events, width)
             if w.executed >= min_executed and w.steal_fraction >= frac]
+
+
+def detect_remote_storms(events: Iterable[Event], topology, width: int = 8,
+                         frac: float = 0.25,
+                         min_executed: int = 4) -> list[Window]:
+    """Windows where cross-tier (topology level >= 2) steals make up at
+    least ``frac`` of executed tasks: work is leaving its socket/pod in
+    bulk, each migration paying the scaled deep-link penalty.  The evidence
+    bar defaults *lower* than ``detect_steal_storms`` — remote steals cost
+    more apiece, so fewer justify flagging — matching the online
+    ``control.StormBreaker(remote_frac=...)`` detector."""
+    return [w for w in windows(events, width, topology=topology)
+            if w.executed >= min_executed and w.remote_fraction >= frac]
 
 
 def detect_inline_bursts(events: Iterable[Event], width: int = 8,

@@ -1,0 +1,409 @@
+"""Hierarchical locality domains: the distance tree, nearest-first
+stealing, level-aware control, and the flat-vs-hierarchical replay
+conformance matrix."""
+import dataclasses
+import json
+
+import pytest
+
+from repro import spec, trace
+from repro.runtime import AdaptiveSteal, DomainQueues, Executor, Task
+from repro.topology import DistanceMatrix, TopologyError, flat, grouped, pods
+
+
+def _drain(ex):
+    ex.run_until_drained()
+    return ex.metrics.snapshot()
+
+
+def _submit_wave(ex, n=120, hot=0, p_hot=0.75, seed=3):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        d = hot if rng.random() < p_hot else int(rng.integers(ex.num_domains))
+        ex.submit(Task(uid=i, home=d, cost=1.0 + (i % 3)), domain=d)
+
+
+class TestDistanceMatrix:
+    def test_flat_builder_single_level(self):
+        m = flat(4)
+        assert not m.hierarchical and m.num_levels == 1
+        assert m.distance(0, 3) == 1.0 and m.distance(2, 2) == 0.0
+        assert m.level(0, 3) == 1
+        assert m.peers(1, 1) == (0, 2, 3)
+        # cyclic order within the level reproduces the flat (d+off)%n scan
+        assert m.cyclic_peers(1, 1) == (2, 3, 0)
+
+    def test_grouped_two_levels(self):
+        m = grouped([2, 2], near=1.0, far=4.0)
+        assert m.hierarchical and m.num_levels == 2
+        assert m.distance(0, 1) == 1.0 and m.distance(0, 2) == 4.0
+        assert m.level(0, 1) == 1 and m.level(1, 3) == 2
+        assert m.peers(0, 1) == (1,) and m.peers(0, 2) == (2, 3)
+        assert m.remote_level() == 2
+
+    def test_pods_distance_from_core_topology(self):
+        from repro.core.topology import tpu_topology
+        m = pods(2, 4)
+        assert m.num_domains == 8 and m.num_levels == 2
+        want = 1.0 / tpu_topology(2, 256).remote_factor
+        assert m.distance(0, 4) == pytest.approx(want)
+        assert m.distance(0, 3) == 1.0
+
+    def test_round_trip_and_equality(self):
+        m = grouped([3, 2], far=6.0)
+        m2 = DistanceMatrix.from_dict(json.loads(json.dumps(m.to_dict())))
+        assert m2 == m and hash(m2) == hash(m)
+        assert m2.cyclic_peers(4, 2) == m.cyclic_peers(4, 2)
+
+    @pytest.mark.parametrize("bad", [
+        [[0.0, 1.0]],                          # not square
+        [[0.0, 1.0], [2.0, 0.0]],              # asymmetric
+        [[1.0, 1.0], [1.0, 0.0]],              # nonzero diagonal
+        [[0.0, 0.0], [0.0, 0.0]],              # zero off-diagonal
+        [[0.0, -1.0], [-1.0, 0.0]],            # negative distance
+    ])
+    def test_invalid_matrices_rejected(self, bad):
+        with pytest.raises(TopologyError):
+            DistanceMatrix(bad)
+
+    def test_builder_validation(self):
+        with pytest.raises(TopologyError):
+            grouped([])
+        with pytest.raises(TopologyError):
+            grouped([2, 0])
+        with pytest.raises(TopologyError):
+            grouped([2, 2], near=2.0, far=1.0)
+
+
+class TestTopologySpec:
+    def test_round_trip_all_kinds(self):
+        for ts in (spec.TopologySpec(kind="flat"),
+                   spec.TopologySpec(kind="grouped", groups=(4, 4), far=4.0),
+                   spec.TopologySpec(kind="pods", num_pods=2,
+                                     domains_per_pod=4)):
+            s = spec.RuntimeSpec(num_domains=8, topology=ts)
+            assert spec.RuntimeSpec.from_json(s.to_json()) == s
+
+    def test_declared_domains(self):
+        assert spec.TopologySpec(kind="flat").declared_domains() is None
+        assert spec.TopologySpec(kind="grouped",
+                                 groups=(3, 5)).declared_domains() == 8
+        assert spec.TopologySpec(kind="pods", num_pods=3,
+                                 domains_per_pod=2).declared_domains() == 6
+
+    def test_domain_count_cross_check(self):
+        with pytest.raises(spec.SpecError, match="declares 8"):
+            spec.RuntimeSpec(num_domains=4, topology=spec.TopologySpec(
+                kind="grouped", groups=(4, 4)))
+
+    def test_grouped_needs_groups(self):
+        with pytest.raises(spec.SpecError, match="groups"):
+            spec.TopologySpec(kind="grouped")
+        with pytest.raises(spec.SpecError, match="groups"):
+            spec.TopologySpec(kind="flat", groups=(2, 2))
+
+    def test_unknown_field_rejected(self):
+        d = spec.TopologySpec(kind="flat").to_dict()
+        d["grops"] = [2, 2]
+        with pytest.raises(spec.SpecError, match="grops"):
+            spec.TopologySpec.from_dict(d)
+
+    def test_build_topology(self):
+        m = spec.build_topology(spec.TopologySpec(kind="grouped",
+                                                  groups=(4, 4)), 8)
+        assert m.hierarchical and m.num_domains == 8
+        assert spec.build_topology(None, 4) is None
+        with pytest.raises(spec.SpecError, match="declares 8"):
+            spec.build_topology(spec.TopologySpec(kind="grouped",
+                                                  groups=(4, 4)), 6)
+
+
+class TestNearestFirstStealing:
+    @pytest.mark.parametrize("order", DomainQueues.STEAL_ORDERS)
+    def test_flat_topology_is_bit_identical_to_none(self, order):
+        """An explicit flat DistanceMatrix must take the literally-original
+        steal scan (same RNG draws, same floats) — for every steal order."""
+        snaps = []
+        for topo in (None, flat(6)):
+            ex = Executor(6, steal_order=order, topology=topo, seed=11,
+                          steal_penalty=lambda t, w: 4.0)
+            _submit_wave(ex, n=150, hot=2)
+            snaps.append(_drain(ex))
+        assert snaps[0] == snaps[1]
+
+    def test_near_tier_wins_over_cyclic_order(self):
+        """Worker in domain 3 of a 4+4 machine, work in 0 (same socket) and
+        4 (other socket): the flat cyclic scan picks 4 first, the
+        hierarchical scan exhausts the socket first and picks 0."""
+        m = grouped([4, 4])
+        q_flat = DomainQueues(8)
+        q_hier = DomainQueues(8, topology=m)
+        for q in (q_flat, q_hier):
+            q.enqueue("near", 0)
+            q.enqueue("far", 4)
+        got_flat = q_flat.dequeue(3)
+        got_hier = q_hier.dequeue(3)
+        assert got_flat.item == "far" and got_flat.domain == 4
+        assert got_hier.item == "near" and got_hier.domain == 0
+        assert got_hier.level == 1 and got_hier.distance == 1.0
+        nxt = q_hier.dequeue(3)
+        assert nxt.item == "far" and nxt.level == 2 and nxt.distance == 4.0
+
+    def test_per_level_min_victim_sequence(self):
+        """``None`` in a tier's slot forbids it; a short sequence extends
+        with its last entry."""
+        m = grouped([2, 2])
+        q = DomainQueues(4, topology=m)
+        q.enqueue("remote", 2)
+        assert q.dequeue(0, min_victim=[1, None]) is None   # remote cut
+        got = q.dequeue(0, min_victim=[1, 1])
+        assert got.item == "remote" and got.level == 2
+        q.enqueue("a", 2)
+        q.enqueue("b", 2)
+        # short sequence [2] extends: remote tier also needs depth >= 2
+        got = q.dequeue(0, min_victim=[2])
+        assert got.item == "a"
+        assert q.dequeue(0, min_victim=[2]) is None          # depth 1 now
+
+    def test_remote_steal_accounting(self):
+        """Executed cross-tier steals are counted and the penalty scales
+        with the link distance."""
+        ex = Executor(4, worker_domains=[0], topology=grouped([2, 2]),
+                      steal_penalty=lambda t, w: 2.0, seed=0)
+        ex.submit(Task(uid=0, home=2, cost=1.0), domain=2)
+        s = _drain(ex)
+        assert s["stolen"] == 1 and s["remote_steals"] == 1
+        assert s["steal_penalty"] == 2.0 * grouped([2, 2]).distance(0, 2)
+
+    def test_per_level_theta_learning(self):
+        gov = AdaptiveSteal(penalty_hint=4.0, task_cost=1.0)
+        w = type("W", (), {"wid": 0})()
+        gov.on_execute(w, True, 6.0, 1.0, level=1)
+        gov.on_execute(w, True, 24.0, 1.0, level=2)
+        est = gov.level_penalty_estimates()
+        assert est[1] == 6.0 and est[2] == 24.0
+        assert gov.threshold_at(2) > gov.threshold_at(1)
+        # unobserved tiers fall back to the global estimate
+        assert gov.threshold_at(3) == gov.threshold
+        fresh = AdaptiveSteal()
+        fresh.seed_level_penalties(est)
+        assert fresh.level_penalty_estimates() == est
+
+
+class TestLevelAwareBreaker:
+    def _breaker(self, **kw):
+        from repro.control import StormBreaker
+        return StormBreaker(width=4, min_executed=4, cooldown=2, **kw)
+
+    def test_remote_storm_trips_remote_state_first(self):
+        b = self._breaker()
+        b.observe_window(8, 4, 0, remote=4)      # remote-dominated storm
+        assert b.remote_tripped and not b.tripped
+        assert b.remote_trips == 1 and b.trips == 0
+
+    def test_persistent_storm_escalates_to_full_trip(self):
+        b = self._breaker()
+        b.observe_window(8, 4, 0, remote=4)
+        assert not b.tripped
+        b.observe_window(8, 4, 0, remote=4)      # storm while throttling
+        assert b.tripped
+
+    def test_local_storm_trips_full_breaker_directly(self):
+        b = self._breaker()
+        b.observe_window(8, 6, 0, remote=0)
+        assert b.tripped and not b.remote_tripped
+
+    def test_remote_trip_blocks_only_deep_levels(self):
+        b = self._breaker(mode="block")
+        w = type("W", (), {"wid": 0})()
+        b.observe_window(8, 4, 0, remote=4)
+        assert b.min_victim_depth_at(w, 1) == 1      # near tier untouched
+        assert b.min_victim_depth_at(w, 2) is None   # deep links cut
+        assert b.min_victim_depth(w) == 1            # flat face unchanged
+
+    def test_state_round_trip(self):
+        b = self._breaker()
+        b.observe_window(8, 4, 0, remote=4)
+        b.observe_window(8, 6, 0, remote=0)
+        st = b.breaker_state()
+        fresh = self._breaker()
+        fresh.seed_state(**st)
+        assert fresh.breaker_state() == st
+        assert fresh.tripped == b.tripped
+        assert fresh.remote_tripped == b.remote_tripped
+
+
+class TestBreakerAwareRouter:
+    def _built(self):
+        s = dataclasses.replace(
+            spec.named("topology_pods_adaptive"),
+            trace=spec.TraceSpec())
+        return s.build()
+
+    def test_full_trip_suspends_spilling(self):
+        b = self._built()
+        ex, router, breaker = b.executor, b.control.router, b.control.breaker
+        # pile work straight onto domain 0 (past the router) so a homed
+        # task would normally spill
+        for i in range(40):
+            ex.queues.enqueue(Task(uid=i, home=0, cost=4.0), 0)
+        assert router.route(Task(uid=99, home=0, cost=1.0)) != 0
+        breaker.seed_state(cooldown_left=2, trips=1)
+        assert router.route(Task(uid=100, home=0, cost=1.0)) == 0
+
+    def test_remote_trip_keeps_spills_in_socket(self):
+        b = self._built()
+        ex, router, breaker = b.executor, b.control.router, b.control.breaker
+        # home pod (0-3) loaded directly, other pod (4-7) empty: the best
+        # candidate is cross-pod, and worth it (gap >> spill * distance)
+        for i in range(600):
+            ex.queues.enqueue(Task(uid=i, home=i % 4, cost=8.0), i % 4)
+        assert router.route(Task(uid=998, home=0, cost=1.0)) >= 4
+        before = router.remote_spills
+        breaker.seed_state(remote_cooldown_left=2, remote_trips=1)
+        got = router.route(Task(uid=999, home=0, cost=1.0))
+        assert got < 4 and router.remote_spills == before
+
+
+class TestPerDomainBatching:
+    def test_size_for_tracks_each_domain(self):
+        from repro.control import BatchGovernor
+        g = BatchGovernor(target_service=8.0, batch_cap=8, ema=1.0,
+                          per_domain=True)
+        g.on_batch(1, 8.0, domain=0)     # expensive queue -> thin batches
+        g.on_batch(1, 1.0, domain=1)     # cheap queue -> wide batches
+        assert g.size_for(0) == 1 and g.size_for(1) == 8
+        assert g.size_for(5) == g.size   # unobserved -> global estimate
+
+    def test_state_round_trip(self):
+        from repro.control import BatchGovernor
+        g = BatchGovernor(per_domain=True)
+        g.on_batch(2, 6.0, domain=3)
+        fresh = BatchGovernor(per_domain=True)
+        fresh.seed_state(service_estimate=g.service_estimate, size=g.size,
+                         domain_estimates=g.domain_service_estimates())
+        assert fresh.size_for(3) == g.size_for(3)
+        assert fresh.domain_service_estimates() == g.domain_service_estimates()
+
+
+class TestCheckpointCompleteness:
+    def test_breaker_and_batch_state_restored_warm(self):
+        b = spec.named("topology_pods_adaptive").build()
+        _submit_wave(b.executor, n=200, hot=0, p_hot=0.85)
+        b.executor.run_until_drained()
+        b.control.breaker.seed_state(cooldown_left=2, remote_cooldown_left=1,
+                                     trips=3, remote_trips=2)
+        ck = spec.checkpoint(b.executor)
+        assert ck.governor.breaker.state is not None
+        assert ck.batch.state is not None and ck.batch.state.domain_estimates
+        ck2 = spec.RuntimeSpec.from_json(ck.to_json())
+        assert ck2 == ck
+        b2 = ck2.build()
+        assert (b2.control.breaker.breaker_state()
+                == b.control.breaker.breaker_state())
+        assert (b2.control.batcher.domain_service_estimates()
+                == b.control.batcher.domain_service_estimates())
+        assert (b2.control.batcher.service_estimate
+                == b.control.batcher.service_estimate)
+
+    def test_static_system_still_refuses(self):
+        b = spec.named("paper_cyclic").build()
+        b.executor.submit(Task(uid=0, home=0, cost=1.0), domain=0)
+        b.executor.run_until_drained()
+        with pytest.raises(spec.SpecError, match="learned"):
+            spec.checkpoint(b.executor)
+
+
+class TestReplayConformanceMatrix:
+    @pytest.mark.parametrize("name", sorted(spec.topology_experiments(
+        steps=12)))
+    def test_header_only_replay_is_exact(self, name):
+        """Every flat/hierarchical policy × workload cell must replay
+        bit-identically from its recorded header alone (schema v3)."""
+        exp = spec.topology_experiments(steps=12)[name]
+        run = exp.run().primary
+        t = trace.loads_lines(trace.dumps_lines(run.trace))
+        rep = trace.replay(t)
+        assert rep.matches_recorded, rep.mismatches()
+        if exp.policy.topology.kind != "flat":
+            assert t.topology_dict is not None
+            assert rep.executor.topology.hierarchical
+
+    def test_flat_topology_matches_no_topology_end_to_end(self):
+        """The flat cell of the matrix equals the same policy with the
+        topology block deleted — today's goldens are reproduced exactly."""
+        exp = spec.topology_experiments(steps=12)["topology_flat_hot_skew"]
+        bare = dataclasses.replace(exp, policy=dataclasses.replace(
+            exp.policy, topology=None))
+        s_topo = exp.run().primary.stats
+        s_bare = bare.run().primary.stats
+        assert s_topo == s_bare
+
+
+class TestTraceBackCompat:
+    def _hier_run(self):
+        exp = spec.topology_experiments(steps=12)[
+            "topology_two_level_hot_skew"]
+        return exp.run().primary.trace
+
+    def test_v2_header_without_topology_still_parses(self):
+        """A v2-era trace (schema 2, no topology key) must stay readable
+        and replay through the flat machine it recorded."""
+        t = self._hier_run()
+        lines = trace.dumps_lines(t)
+        head = json.loads(lines[0])
+        assert head["schema"] == 3
+        head["schema"] = 2
+        head.pop("topology")
+        # drop the spec's topology block too: a real v2 writer never knew it
+        head["spec"].pop("topology")
+        t2 = trace.loads_lines([json.dumps(head)] + lines[1:])
+        assert t2.topology_dict is None
+        ex = trace.executor_from_spec(t2)
+        assert ex.topology is None
+
+    def test_v1_minimal_header_still_parses(self):
+        t = self._hier_run()
+        lines = trace.dumps_lines(t)
+        head = json.loads(lines[0])
+        head = {k: head[k] for k in ("record", "kind", "num_domains",
+                                     "worker_domains", "steal_order",
+                                     "pool_cap", "seed", "governor")}
+        head["schema"] = 1
+        t1 = trace.loads_lines([json.dumps(head)] + lines[1:])
+        assert t1.spec_dict is None and t1.topology_dict is None
+        ex = trace.executor_from_meta(t1)
+        assert ex.topology is None and ex.num_domains == 8
+
+    def test_unsupported_schema_rejected(self):
+        t = self._hier_run()
+        lines = trace.dumps_lines(t)
+        head = json.loads(lines[0])
+        head["schema"] = 4
+        with pytest.raises(trace.TraceSchemaError, match="schema"):
+            trace.loads_lines([json.dumps(head)] + lines[1:])
+
+    def test_hierarchical_replay_from_meta_alone(self):
+        """Strip the spec: the schema-v3 topology block in the header is
+        enough for ``executor_from_meta`` to rebuild the exact nearest-first
+        scan (the recorded constant penalty supplied explicitly)."""
+        t = self._hier_run()
+        lines = trace.dumps_lines(t)
+        head = json.loads(lines[0])
+        head.pop("spec")
+        head.pop("experiment", None)
+        t2 = trace.loads_lines([json.dumps(head)] + lines[1:])
+        rep = trace.replay(t2, lambda tr: trace.executor_from_meta(
+            tr, steal_penalty=lambda task, w: 6.0))
+        assert rep.matches_recorded, rep.mismatches()
+        assert rep.executor.topology.hierarchical
+
+    def test_remote_storm_detector_on_recorded_events(self):
+        t = self._hier_run()
+        m = DistanceMatrix.from_dict(t.topology_dict)
+        wins = trace.windows(t.events, width=8, topology=m)
+        assert sum(w.remote_steals for w in wins) == t.stats["remote_steals"]
+        storms = trace.detect_remote_storms(t.events, m, width=8)
+        for w in storms:
+            assert w.remote_fraction >= 0.25
