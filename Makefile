@@ -2,7 +2,7 @@
 # works without an editable install.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test smoke bench trace control spec experiments topology
+.PHONY: test smoke bench trace control spec experiments topology obs overhead
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -50,3 +50,16 @@ experiments:
 # replay bit-identity for every arm (writes BENCH_topology.json)
 topology:
 	$(PY) -m benchmarks.topology_locality
+
+# observability smoke: observe a recorded run end to end (span trees,
+# registry metrics, exact p50/p95/p99, self-profiled overhead) and export
+# the Perfetto timeline (obs_timeline.perfetto-trace; CI uploads it)
+obs:
+	$(PY) examples/obs_timeline.py
+
+# scheduler self-overhead: ns/decision for the four hot paths plus the
+# obs-on/off passivity A/B, gated at <5% wall-time cost (writes
+# BENCH_overhead.json).  CI runs the reduced --fast ladder; the committed
+# artifact comes from the full `python -m benchmarks.scheduler_overhead`.
+overhead:
+	$(PY) -m benchmarks.scheduler_overhead --fast

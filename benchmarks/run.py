@@ -125,18 +125,28 @@ def run_experiments(experiments: dict,
 
     CSV: experiment,repeat,tasks,steps,throughput,local_frac,steal_frac,
     steal_penalty,idle_polls,replay_exact
+
+    A second per-experiment block aggregates across repeats — throughput,
+    locality, remote steals and the exact sojourn p50/p95/p99 (pooled task
+    timings over every repeat's replayed trace, via ``repro.obs``'s
+    nearest-rank percentiles).  The same sojourn percentiles land per run
+    in ``BENCH_experiments.json``.
     """
     import json
 
+    from repro.obs import percentiles
     from repro.trace import dumps_lines, loads_lines, replay
 
     lines = ["experiment,repeat,tasks,steps,throughput,local_frac,"
              "steal_frac,steal_penalty,idle_polls,replay_exact"]
     results: dict[str, dict] = {}
+    summary_rows: list[str] = []
     diverged: list[str] = []
     for name, exp in experiments.items():
         result = exp.run()
         runs = []
+        agg = {"throughput": [], "local": [], "remote": 0}
+        sojourns: list[float] = []
         for r, run in enumerate(result.runs):
             # conformance check: through the JSONL wire format, the header
             # alone must reconstruct the recorded system bit-for-bit.  The
@@ -154,9 +164,26 @@ def run_experiments(experiments: dict,
                 f"{s['local_fraction']:.3f},{s['steal_fraction']:.3f},"
                 f"{s['steal_penalty']:.0f},{s['idle_polls']:.0f},"
                 f"{int(rep.matches_recorded)}")
+            run_sojourns = [t.sojourn for t in rep.task_times().values()]
+            sojourns.extend(run_sojourns)
+            agg["throughput"].append(s["executed"] / max(steps, 1))
+            agg["local"].append(s["local_fraction"])
+            agg["remote"] += int(s["remote_steals"])
             runs.append({"seed": run.seed, "steps": steps,
-                         "replay_exact": rep.matches_recorded, **s})
+                         "replay_exact": rep.matches_recorded,
+                         "sojourn": (percentiles(run_sojourns)
+                                     if run_sojourns else None), **s})
         results[name] = {"experiment": exp.to_dict(), "runs": runs}
+        p = percentiles(sojourns) if sojourns else \
+            {"p50": float("nan"), "p95": float("nan"), "p99": float("nan")}
+        summary_rows.append(
+            f"{name},{sum(agg['throughput']) / len(agg['throughput']):.4f},"
+            f"{sum(agg['local']) / len(agg['local']):.3f},{agg['remote']},"
+            f"{p['p50']:.1f},{p['p95']:.1f},{p['p99']:.1f}")
+    lines.append("")
+    lines.append("experiment,throughput,local_frac,remote_steals,"
+                 "sojourn_p50,sojourn_p95,sojourn_p99")
+    lines.extend(summary_rows)
     if json_path:
         with open(json_path, "w", encoding="utf-8") as fh:
             json.dump({"bench": "experiments", "results": results},

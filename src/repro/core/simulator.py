@@ -229,13 +229,17 @@ def run_samples(grid: BlockGrid, topo: MachineTopology, make_policy,
 
 
 def summarize(results: list[SimResult]) -> dict[str, float]:
-    m = np.array([r.mlups for r in results])
+    # percentiles via the shared deterministic helper (repro.obs): exact
+    # nearest-rank over the full sample, so every quantile is an observed
+    # trial value rather than an interpolation artifact.
+    from ..obs.metrics import percentile
+    m = [r.mlups for r in results]
     return {
-        "median_mlups": float(np.median(m)),
-        "q25": float(np.percentile(m, 25)),
-        "q75": float(np.percentile(m, 75)),
-        "q05": float(np.percentile(m, 5)),
-        "q95": float(np.percentile(m, 95)),
+        "median_mlups": float(percentile(m, 50)),
+        "q25": float(percentile(m, 25)),
+        "q75": float(percentile(m, 75)),
+        "q05": float(percentile(m, 5)),
+        "q95": float(percentile(m, 95)),
         "local_fraction": float(np.mean([r.local_fraction for r in results])),
         "steal_fraction": float(np.mean([r.steal_fraction for r in results])),
     }

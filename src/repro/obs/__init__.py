@@ -1,0 +1,56 @@
+"""repro.obs — spans, deterministic metrics, timeline export, self-profiling.
+
+The paper's evidence is observational: Fig. 4-style per-thread timelines
+and locality counters that show *where* dynamic scheduling breaks page
+locality.  Earlier PRs record everything (submission traces, the event
+ring buffer, ``RuntimeStats``) but report only aggregates.  This package
+is the observability layer over that record — strictly post hoc (or
+passively attached), so observation never perturbs the observed schedule:
+
+  paper / ROADMAP concept                obs object
+  -------------------------------------  ---------------------------------
+  per-task lifecycle (submit → queue →   ``assemble_spans`` → ``Span`` /
+  steal → run), Fig. 4 drill-down        ``SpanForest`` — one well-nested
+                                         span path per task, steal spans
+                                         priced with topology level/distance
+  latency distributions, p50/p95/p99     ``Registry`` (counters, gauges,
+  as experiment outputs (ROADMAP 3)      fixed-bucket log-scale
+                                         ``Histogram``) + exact nearest-rank
+                                         ``percentile``/``percentiles``
+  interactive Fig. 4 timelines           ``export_chrome_trace`` — Perfetto/
+                                         Chrome trace-event JSON with per-
+                                         domain tracks and steal flow-arrows
+  scheduler cost at production scale     ``HotPathProfiler`` — opt-in
+  (ROADMAP 2, ns/decision)               ``perf_counter_ns`` timers around
+                                         submit-route / steal-scan /
+                                         batch-grab / event-append, fed by
+                                         ``Executor(profiler=...)``
+  one-call observation                   ``observe(trace)`` → ``ObsReport``;
+                                         ``Observation`` is the live form a
+                                         spec-built system carries
+                                         (``RuntimeSpec.obs`` → ``Built.obs``)
+
+Usage::
+
+    from repro import obs, spec
+
+    built = spec.named("paper_cyclic").build()
+    ...                                    # drive built.executor, record
+    report = obs.observe(trace)            # spans + histograms + percentiles
+    print(report.snapshot()["percentiles"]["sojourn"])
+    obs.export_chrome_trace(trace, "run.perfetto-trace")
+"""
+from .chrome import chrome_trace_events, export_chrome_trace
+from .metrics import Counter, Gauge, Histogram, Registry, percentile, \
+    percentiles
+from .observe import ObsReport, Observation, observe
+from .profile import PATHS, HotPathProfiler
+from .spans import Span, SpanForest, assemble_spans, spans_from
+
+__all__ = [
+    "chrome_trace_events", "export_chrome_trace",
+    "Counter", "Gauge", "Histogram", "Registry", "percentile", "percentiles",
+    "ObsReport", "Observation", "observe",
+    "PATHS", "HotPathProfiler",
+    "Span", "SpanForest", "assemble_spans", "spans_from",
+]

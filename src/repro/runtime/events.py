@@ -22,6 +22,7 @@ export of the buffer therefore covers a *window* of the run, not the run —
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import Counter, deque
 from typing import Iterator
 
@@ -53,10 +54,21 @@ class EventLog:
         self.maxlen = maxlen
         self._buf: deque[Event] = deque(maxlen=maxlen)
         self._counts: Counter[str] = Counter()
+        self._warned_overflow = False
 
     def emit(self, step: int, kind: str, worker: int, domain: int,
              task_uid: int, src_domain: int = -1, cost: float = 0.0,
              penalty: float = 0.0) -> None:
+        if not self._warned_overflow and len(self._buf) == self.maxlen:
+            # One-shot: overflow used to be silent, and window-sensitive
+            # analyses (storm detection, span assembly) quietly degraded.
+            # counts()/total stay whole-run; only the retained window drops.
+            self._warned_overflow = True
+            warnings.warn(
+                f"EventLog overflow: ring buffer (maxlen={self.maxlen}) is "
+                "dropping oldest events; exports now cover a window of the "
+                "run, not the run (counts()/total remain whole-run)",
+                RuntimeWarning, stacklevel=3)
         self._buf.append(Event(step, kind, worker, domain, task_uid,
                                src_domain, cost, penalty))
         self._counts[kind] += 1

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+from time import perf_counter_ns
 from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
@@ -117,6 +118,15 @@ class Executor:
                         count cross-tier steals as ``remote_steals``.  A
                         flat matrix (or None, the default) reproduces the
                         pre-topology behaviour bit-for-bit.
+    profiler:           optional ``repro.obs.HotPathProfiler``.  When
+                        attached, the executor wraps its four hot decision
+                        sites — submit-route, steal-scan, batch-grab,
+                        event-append — in ``perf_counter_ns`` timers and
+                        feeds the elapsed time to ``profiler.add``.  The
+                        profiler is passive (it observes wall clock, never
+                        a decision), so profiled runs keep bit-identical
+                        ``RuntimeStats`` and replays; with the default
+                        ``None`` the timers are skipped entirely.
     """
 
     def __init__(self, num_domains: int,
@@ -134,7 +144,8 @@ class Executor:
                  batch: Any = 1,
                  batch_handler: BatchHandler | None = None,
                  step_hook: StepHook | None = None,
-                 topology: Any = None):
+                 topology: Any = None,
+                 profiler: Any = None):
         self.num_domains = num_domains
         self.seed = seed
         self.rng = np.random.default_rng(seed)
@@ -158,6 +169,7 @@ class Executor:
         self.batch = batch
         self.batch_handler = batch_handler
         self.step_hook = step_hook
+        self.profiler = profiler
         # the declarative configuration this executor was built from, when
         # constructed via repro.spec (``RuntimeSpec.build`` stamps it here);
         # trace headers embed it so a recorded run fully names its system.
@@ -204,12 +216,15 @@ class Executor:
         bound is a hard invariant.
         """
         if domain is None:
+            t0 = perf_counter_ns() if self.profiler is not None else 0
             if self.router is not None:
                 domain = int(self.router(task))
             elif task.home >= 0:
                 domain = task.home
             else:
                 domain = self.next_round_robin()
+            if self.profiler is not None:
+                self.profiler.add("submit_route", perf_counter_ns() - t0)
         if not 0 <= domain < self.num_domains:
             raise ValueError(f"domain {domain} out of range")
         while self.pool_cap is not None and len(self.queues) >= self.pool_cap:
@@ -274,6 +289,7 @@ class Executor:
         queue and execute the batch.  Returns the number of tasks executed
         (0 when nothing was eligible).  Inline (backpressure) grabs stay
         single-task: the submitter only helps enough to free one slot."""
+        t0 = perf_counter_ns() if self.profiler is not None else 0
         if inline:
             got = self.queues.dequeue(worker.domain)
         else:
@@ -290,6 +306,8 @@ class Executor:
                     mv = [self.governor.min_victim_depth_at(worker, lv)
                           for lv in range(1, topo.num_levels + 1)]
                 got = self.queues.dequeue(worker.domain, min_victim=mv)
+        if self.profiler is not None:
+            self.profiler.add("steal_scan", perf_counter_ns() - t0)
         if got is None:
             worker.stats.idle_polls += 1
             self.metrics.on_idle()
@@ -301,10 +319,13 @@ class Executor:
         if not inline:
             limit = self._batch_limit(got.domain)
             if limit > 1:
+                t0 = perf_counter_ns() if self.profiler is not None else 0
                 tasks += self.queues.drain(
                     got.domain, limit - 1,
                     budget=getattr(self.batch, "budget", None),
                     spent=got.item.cost)
+                if self.profiler is not None:
+                    self.profiler.add("batch_grab", perf_counter_ns() - t0)
         stolen = got.stolen
         # a steal's penalty is scaled by the link distance it crossed
         # (1.0 for flat/no topology — bit-identical to the uniform-hop rule)
@@ -348,8 +369,14 @@ class Executor:
               src_domain: int = -1, cost: float = 0.0,
               penalty: float = 0.0) -> None:
         if self.events is not None:
-            self.events.emit(self._step, kind, worker, domain, task_uid,
-                             src_domain, cost, penalty)
+            if self.profiler is not None:
+                t0 = perf_counter_ns()
+                self.events.emit(self._step, kind, worker, domain, task_uid,
+                                 src_domain, cost, penalty)
+                self.profiler.add("event_append", perf_counter_ns() - t0)
+            else:
+                self.events.emit(self._step, kind, worker, domain, task_uid,
+                                 src_domain, cost, penalty)
 
     # -- introspection ------------------------------------------------------
     @property

@@ -49,8 +49,9 @@ from .experiments import (EXPERIMENT_VERSION, CostsSpec, ExperimentResult,
                           topology_experiments, topology_workloads)
 from .model import (SPEC_VERSION, BatchSpec, BatchStateSpec, BreakerSpec,
                     BreakerStateSpec, GovernorSpec, GovernorStateSpec,
-                    PenaltySpec, RouterSpec, RuntimeSpec, ServingSpec,
-                    SpecError, TopologySpec, TraceSpec, dump, load)
+                    ObsSpec, PenaltySpec, RouterSpec, RuntimeSpec,
+                    ServingSpec, SpecError, TopologySpec, TraceSpec, dump,
+                    load)
 from .registry import named, policy_names
 
 __all__ = [
@@ -64,8 +65,8 @@ __all__ = [
     "runtime_workloads", "standard_workloads",
     "topology_experiments", "topology_workloads",
     "SPEC_VERSION", "BatchSpec", "BatchStateSpec", "BreakerSpec",
-    "BreakerStateSpec", "GovernorSpec", "GovernorStateSpec", "PenaltySpec",
-    "RouterSpec", "RuntimeSpec", "ServingSpec", "SpecError", "TopologySpec",
-    "TraceSpec", "dump", "load",
+    "BreakerStateSpec", "GovernorSpec", "GovernorStateSpec", "ObsSpec",
+    "PenaltySpec", "RouterSpec", "RuntimeSpec", "ServingSpec", "SpecError",
+    "TopologySpec", "TraceSpec", "dump", "load",
     "named", "policy_names",
 ]

@@ -47,13 +47,17 @@ class Built:
     ``executor`` is always present; ``control`` (a wired
     ``repro.control.ControlLoop``) exists when the spec declares a cost
     router, a governed batch, or a breaker; ``recorder`` (an attached
-    ``repro.trace.TraceRecorder``) when ``TraceSpec.record`` is set.
+    ``repro.trace.TraceRecorder``) when ``TraceSpec.record`` is set;
+    ``obs`` (a live ``repro.obs.Observation`` — registry plus, under
+    ``ObsSpec.profile``, the executor's hot-path profiler) when
+    ``ObsSpec.enabled`` is set.
     """
 
     spec: RuntimeSpec
     executor: Executor
     control: Optional[Any] = None      # repro.control.ControlLoop
     recorder: Optional[Any] = None     # repro.trace.TraceRecorder
+    obs: Optional[Any] = None          # repro.obs.Observation
 
 
 def build_penalty(spec: PenaltySpec) -> Optional[Callable[[Task, Worker], float]]:
@@ -193,6 +197,11 @@ def build(spec: RuntimeSpec, *,
     if governor is None:
         governor = build_governor(spec.governor)
 
+    obs = None
+    if spec.obs.enabled:
+        from ..obs import Observation           # lazy: obs imports runtime
+        obs = Observation(spec.obs)
+
     batch: Any = spec.batch.size if spec.batch.kind == "fixed" else 1
     ex = Executor(
         spec.num_domains,
@@ -208,7 +217,11 @@ def build(spec: RuntimeSpec, *,
         batch=batch,
         batch_handler=batch_handler,
         topology=build_topology(spec.topology, spec.num_domains),
+        profiler=None if obs is None else obs.profiler,
     )
+    # the live observation rides on the executor so trace headers can name
+    # it (schema v4's "obs" block); None for unobserved builds.
+    ex.obs = obs
 
     control = None
     if _needs_control(spec):
@@ -268,4 +281,5 @@ def build(spec: RuntimeSpec, *,
         recorder = TraceRecorder(stream=stream)
         recorder.attach(ex)          # last: header sees the wired governor
 
-    return Built(spec=spec, executor=ex, control=control, recorder=recorder)
+    return Built(spec=spec, executor=ex, control=control, recorder=recorder,
+                 obs=obs)

@@ -673,6 +673,50 @@ class TopologySpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObsSpec:
+    """Observability declared in the spec (``repro.obs``).
+
+    ``enabled=True`` attaches a live ``repro.obs.Observation`` at build
+    time (``Built.obs``): a deterministic metrics registry (sized by the
+    ``hist_*`` bucket ladder) plus ``Observation.report(trace)`` for the
+    post-hoc span/histogram/percentile pipeline.  ``profile=True``
+    additionally hands the executor a ``HotPathProfiler`` — opt-in
+    ``perf_counter_ns`` timers around the four scheduling hot paths
+    (submit-route, steal-scan, batch-grab, event-append), the substrate of
+    ``benchmarks/scheduler_overhead.py``.
+
+    Observation is passive by contract: an obs-enabled build produces
+    bit-identical ``RuntimeStats`` and replays to an obs-disabled one
+    (gated in ``tests/test_obs.py``).  Trace headers record this block as
+    schema v4 so an observed run names how it was observed.
+    """
+
+    enabled: bool = False
+    profile: bool = False
+    hist_lo: float = 0.5
+    hist_growth: float = 2.0
+    hist_buckets: int = 24
+
+    def __post_init__(self):
+        _require(not (self.profile and not self.enabled),
+                 "obs.profile requires obs.enabled (timers need a live "
+                 "observation to report into)")
+        _require(self.hist_lo > 0, "obs.hist_lo must be > 0")
+        _require(self.hist_growth > 1.0, "obs.hist_growth must be > 1")
+        _require(self.hist_buckets >= 1, "obs.hist_buckets must be >= 1")
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"enabled": self.enabled, "profile": self.profile,
+                "hist_lo": self.hist_lo, "hist_growth": self.hist_growth,
+                "hist_buckets": self.hist_buckets}
+
+    @classmethod
+    def from_dict(cls, d: dict, where: str = "obs") -> "ObsSpec":
+        _reject_unknown(cls, d, where)
+        return _construct(cls, _coerce_scalars(cls, d, where), where)
+
+
+@dataclasses.dataclass(frozen=True)
 class RuntimeSpec:
     """The top of the tree: one value that names a whole runtime system."""
 
@@ -688,6 +732,7 @@ class RuntimeSpec:
     router: RouterSpec = RouterSpec()
     batch: BatchSpec = BatchSpec()
     trace: TraceSpec = TraceSpec()
+    obs: ObsSpec = ObsSpec()
     serving: Optional[ServingSpec] = None
     topology: Optional[TopologySpec] = None
 
@@ -745,6 +790,7 @@ class RuntimeSpec:
             "router": self.router.to_dict(),
             "batch": self.batch.to_dict(),
             "trace": self.trace.to_dict(),
+            "obs": self.obs.to_dict(),
             "serving": (None if self.serving is None
                         else self.serving.to_dict()),
             "topology": (None if self.topology is None
@@ -773,7 +819,7 @@ class RuntimeSpec:
             kw["worker_domains"] = tuple(int(x) for x in wd)
         for name, sub in (("penalty", PenaltySpec), ("governor", GovernorSpec),
                           ("router", RouterSpec), ("batch", BatchSpec),
-                          ("trace", TraceSpec)):
+                          ("trace", TraceSpec), ("obs", ObsSpec)):
             if name in kw:
                 kw[name] = sub.from_dict(kw[name], f"{where}.{name}")
         if kw.get("serving") is not None:

@@ -58,9 +58,9 @@ from .replay import (ReplayComparison, ReplayResult, TaskTiming,
                      replay, task_times)
 from .schema import (SCHEMA_VERSION, SubmissionRecord, Trace,
                      TraceSchemaError, event_stolen)
-from .storms import (Window, depth_imbalance, detect_inline_bursts,
-                     detect_remote_storms, detect_steal_storms,
-                     render_timeline, windows)
+from .storms import (DroppedEventsError, Window, depth_imbalance,
+                     detect_inline_bursts, detect_remote_storms,
+                     detect_steal_storms, render_timeline, windows)
 from .workloads import (Arrival, Workload, benchmark_waves, bursty, diurnal,
                         drive, hot_skew, lognormal_costs, poisson,
                         standard_scenarios)
@@ -73,7 +73,7 @@ __all__ = [
     "executor_from_meta", "executor_from_spec", "replay", "task_times",
     "SCHEMA_VERSION", "SubmissionRecord", "Trace", "TraceSchemaError",
     "event_stolen",
-    "Window", "depth_imbalance", "detect_inline_bursts",
+    "DroppedEventsError", "Window", "depth_imbalance", "detect_inline_bursts",
     "detect_remote_storms", "detect_steal_storms", "render_timeline",
     "windows",
     "Arrival", "Workload", "benchmark_waves", "bursty", "diurnal", "drive",

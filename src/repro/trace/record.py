@@ -60,6 +60,11 @@ def executor_meta(ex: Executor) -> dict:
     spec = getattr(ex, "spec", None)
     if spec is not None:
         meta["spec"] = spec.to_dict()
+    obs = getattr(ex, "obs", None)
+    if obs is not None:
+        # schema v4: name how the run was observed.  Informational only —
+        # observation is passive, so replay needs nothing from this block.
+        meta["obs"] = obs.spec.to_dict()
     experiment = getattr(ex, "experiment", None)
     if experiment is not None:
         # executors driven by repro.spec.experiments also name the full

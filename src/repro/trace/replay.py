@@ -202,6 +202,18 @@ class ReplayResult:
                                "(record_events=False)")
         return task_times(self.trace.submissions, self.executor.events)
 
+    def sojourn_percentiles(self, qs=(50, 95, 99)) -> dict[str, float]:
+        """Exact nearest-rank percentiles of this replay's per-task sojourn
+        (``{"p50": ..., "p95": ..., "p99": ...}``) — the latency summary
+        ``BENCH_experiments.json`` exports per run.  Computed over the full
+        retained sample by ``repro.obs.percentiles`` (no bucket estimates).
+        """
+        from ..obs.metrics import percentiles   # lazy: obs imports trace
+        times = self.task_times()
+        if not times:
+            raise RuntimeError("no retained task timings to summarize")
+        return percentiles([t.sojourn for t in times.values()], qs)
+
 
 @dataclasses.dataclass
 class ReplayComparison:

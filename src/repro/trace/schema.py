@@ -32,6 +32,12 @@ block simply means the flat machine, which is what every v2 executor was.
 Schema v3 adds the serialized ``repro.topology.DistanceMatrix`` under
 ``topology`` when the recorded executor carried one, so a hierarchical
 trace replays bit-identically from its header alone.
+Schema v4 adds the serialized ``repro.spec.ObsSpec`` under ``obs`` when the
+recorded run carried a live observation (``RuntimeSpec.obs.enabled``) — an
+informational block naming how the run was observed.  Observation never
+perturbs the schedule (the obs layer's gated invariant), so v1–v3 readers
+and replays need nothing from it, and v3 traces (no ``obs``) stay readable:
+the run simply was not observed.
 """
 from __future__ import annotations
 
@@ -40,8 +46,8 @@ from typing import Any, Iterable
 
 from ..runtime import Event
 
-SCHEMA_VERSION = 3
-SUPPORTED_SCHEMAS = (1, 2, SCHEMA_VERSION)
+SCHEMA_VERSION = 4
+SUPPORTED_SCHEMAS = (1, 2, 3, SCHEMA_VERSION)
 TRACE_KIND = "repro.runtime-trace"
 
 
@@ -90,6 +96,23 @@ class Trace:
         None for flat machines and v1/v2 traces.  Parse with
         ``repro.topology.DistanceMatrix.from_dict``."""
         return self.meta.get("topology")
+
+    @property
+    def obs_dict(self) -> dict[str, Any] | None:
+        """The serialized ``repro.spec.ObsSpec`` the recorded run was
+        observed under (schema v4, obs-enabled spec-built executors), or
+        None for unobserved runs and v1–v3 traces.  Purely informational:
+        observation never changes the schedule."""
+        return self.meta.get("obs")
+
+    @property
+    def events_dropped(self) -> int:
+        """Events the recorded run's ring buffer discarded before the trace
+        was cut (whole-run totals minus the retained window).  A nonzero
+        value means ``events`` is a *window* of the run — window-sensitive
+        analyses (``repro.trace.storms``) refuse such traces."""
+        total = sum(self.event_counts.values()) if self.event_counts else 0
+        return max(total - self.events_retained, 0)
 
     @property
     def experiment_dict(self) -> dict[str, Any] | None:

@@ -33,6 +33,30 @@ from .schema import event_stolen
 EXEC_KINDS = ("run", "steal", "inline")
 
 
+class DroppedEventsError(ValueError):
+    """Raised when storm analysis is asked to run over an event window that
+    lost events to the ring buffer: a window with holes would silently
+    under-count steals/inlines and mis-date every window, so the detectors
+    refuse instead of degrading.  Raise ``event_maxlen`` (or analyze
+    streamed trace segments) to observe the whole run."""
+
+
+def _checked_events(events: Iterable[Event]) -> Iterable[Event]:
+    """Accept an event iterable, a live ``EventLog``, or a ``Trace``;
+    refuse any source that has already dropped events."""
+    dropped = getattr(events, "events_dropped", None)    # Trace
+    if dropped is None:
+        dropped = getattr(events, "dropped", None)       # live EventLog
+    if dropped:
+        raise DroppedEventsError(
+            f"event window lost {dropped} events to the ring buffer; storm "
+            "analysis over a holed window would mis-count — raise "
+            "event_maxlen or analyze streamed trace segments (pass a plain "
+            "event list to override deliberately)")
+    inner = getattr(events, "events", None)              # Trace payload
+    return inner if inner is not None else events
+
+
 @dataclasses.dataclass(frozen=True)
 class Window:
     """Aggregate of one fixed-width step interval ``[start, start+width)``.
@@ -78,11 +102,17 @@ def windows(events: Iterable[Event], width: int = 8,
     task from a queue at distance level >= 2 (cross socket/pod) — the
     level dimension ``detect_remote_storms`` and the online
     ``control.StormBreaker`` act on.
+
+    ``events`` may be a plain event iterable, a live ``runtime.EventLog``,
+    or a recorded ``Trace``.  A log/trace that already *dropped* events to
+    its ring buffer is refused with ``DroppedEventsError`` (a holed window
+    would silently mis-count); pass ``list(log)`` to analyze the retained
+    window deliberately.
     """
     if width < 1:
         raise ValueError("window width must be >= 1")
     acc: dict[int, dict[str, int]] = {}
-    for e in events:
+    for e in _checked_events(events):
         w = acc.setdefault(e.step // width,
                            {"run": 0, "steal": 0, "inline": 0,
                             "idle": 0, "submit": 0, "remote": 0})

@@ -1,0 +1,465 @@
+"""repro.obs: spans, metrics, Perfetto export, profiler, obs passivity.
+
+The load-bearing gate lives in ``TestObsPassivity``: enabling observation
+(``ObsSpec.enabled``, with or without the profiler) must leave the schedule
+bit-identical — same ``RuntimeStats``, same replay — for every registry
+policy.  The hypothesis classes gate the span-tree structural invariants
+``repro.obs.spans`` promises (well-nestedness, one path per task, exact
+partition of submitted uids into observed + missing).
+"""
+import dataclasses
+import json
+import warnings
+
+import pytest
+
+from repro import obs, spec, trace
+from repro.runtime import EventLog
+
+
+def _workload(num_domains=4, steps=16, seed=2, p_hot=0.8):
+    return trace.lognormal_costs(
+        trace.hot_skew(trace.poisson(rate=num_domains, steps=steps,
+                                     num_domains=num_domains, seed=seed),
+                       hot_domain=0, p_hot=p_hot, seed=seed),
+        median=2.0, sigma=0.75, seed=seed)
+
+
+def _recorded(s=None, **wl_kwargs):
+    """Build ``s`` (default: an observed, recorded 4-domain spec), drive the
+    standard workload, return the finished trace."""
+    if s is None:
+        s = spec.RuntimeSpec(
+            num_domains=4,
+            penalty=spec.PenaltySpec(kind="constant", value=4.0),
+            trace=spec.TraceSpec(record=True),
+            obs=spec.ObsSpec(enabled=True))
+    built = s.build()
+    trace.drive(built.executor, _workload(num_domains=s.num_domains,
+                                          **wl_kwargs))
+    return built, built.recorder.finish()
+
+
+class TestPercentiles:
+    def test_nearest_rank_is_exact_and_observed(self):
+        vals = list(range(1, 11))                    # 1..10
+        assert obs.percentile(vals, 50) == 5
+        assert obs.percentile(vals, 95) == 10
+        assert obs.percentile(vals, 0) == 1
+        assert obs.percentile(vals, 100) == 10
+        # nearest-rank always returns a member of the sample
+        assert obs.percentile([3.5, 1.25, 9.75], 50) in (1.25, 3.5, 9.75)
+
+    def test_order_independence(self):
+        a = [5.0, 1.0, 9.0, 3.0, 7.0]
+        for q in (10, 50, 90, 99):
+            assert obs.percentile(a, q) == obs.percentile(sorted(a), q)
+
+    def test_empty_and_out_of_range_raise(self):
+        with pytest.raises(ValueError, match="empty"):
+            obs.percentile([], 50)
+        with pytest.raises(ValueError, match="outside"):
+            obs.percentile([1.0], 101)
+
+    def test_percentiles_dict_labels(self):
+        d = obs.percentiles(list(range(100)), qs=(50, 99, 99.9))
+        assert set(d) == {"p50", "p99", "p99.9"}
+        assert d["p50"] == 49
+
+
+class TestHistogram:
+    def test_snapshot_is_deterministic(self):
+        a, b = obs.Histogram(), obs.Histogram()
+        vals = [0.1, 1.0, 7.0, 7.0, 300.0, 1e9]
+        a.record_many(vals)
+        b.record_many(reversed(vals))
+        assert a.snapshot() == b.snapshot()
+
+    def test_single_value_quantile_exact(self):
+        h = obs.Histogram()
+        h.record(7.0)
+        assert h.quantile(50) == 7.0 == h.quantile(99)
+
+    def test_overflow_bucket_reports_observed_max(self):
+        h = obs.Histogram(lo=1.0, growth=2.0, buckets=3)  # bounds 1,2,4
+        h.record(100.0)
+        h.record(9.0)
+        assert h.quantile(99) == 100.0
+        assert h.nonzero_buckets() == [[100.0, 2]]
+
+    def test_quantile_clamped_to_observed_range(self):
+        h = obs.Histogram(lo=1.0, growth=2.0, buckets=8)
+        h.record_many([3.0, 3.0, 3.0])               # land in bucket ub=4
+        assert h.quantile(50) == 3.0                 # clamped to vmax
+
+    def test_empty_histogram(self):
+        h = obs.Histogram()
+        assert h.snapshot() == {"count": 0}
+        assert h.mean == 0.0
+        with pytest.raises(ValueError, match="empty"):
+            h.quantile(50)
+
+    def test_bad_ladder_rejected(self):
+        with pytest.raises(ValueError):
+            obs.Histogram(lo=0.0)
+        with pytest.raises(ValueError):
+            obs.Histogram(growth=1.0)
+        with pytest.raises(ValueError):
+            obs.Histogram(buckets=0)
+
+    def test_mean_min_max(self):
+        h = obs.Histogram()
+        h.record_many([2.0, 4.0, 6.0])
+        s = h.snapshot()
+        assert (s["mean"], s["min"], s["max"]) == (4.0, 2.0, 6.0)
+
+
+class TestRegistry:
+    def test_get_or_create_returns_same_instrument(self):
+        r = obs.Registry()
+        c = r.counter("x")
+        c.inc(3)
+        assert r.counter("x") is c
+        assert r.snapshot()["x"] == 3
+
+    def test_kind_mismatch_raises(self):
+        r = obs.Registry()
+        r.counter("x")
+        with pytest.raises(ValueError, match="already registered"):
+            r.histogram("x")
+
+    def test_snapshot_sorted_and_json_ready(self):
+        r = obs.Registry()
+        r.gauge("b").set(2.5)
+        r.counter("a").inc()
+        r.histogram("c").record(1.0)
+        snap = r.snapshot()
+        assert list(snap) == ["a", "b", "c"]
+        json.dumps(snap)                              # must serialize
+
+    def test_counter_monotone(self):
+        with pytest.raises(ValueError, match="up"):
+            obs.Counter().inc(-1)
+
+    def test_spec_ladder_applies_to_histograms(self):
+        r = obs.Registry(hist_lo=1.0, hist_growth=4.0, hist_buckets=2)
+        assert r.histogram("h").bounds == (1.0, 4.0)
+
+
+class TestObsSpec:
+    def test_round_trip(self):
+        s = spec.ObsSpec(enabled=True, profile=True, hist_lo=0.25,
+                         hist_growth=3.0, hist_buckets=12)
+        assert spec.ObsSpec.from_dict(s.to_dict()) == s
+
+    def test_profile_requires_enabled(self):
+        with pytest.raises(spec.SpecError, match="profile"):
+            spec.ObsSpec(profile=True)
+
+    def test_bad_ladder_rejected(self):
+        with pytest.raises(spec.SpecError):
+            spec.ObsSpec(hist_lo=0.0)
+        with pytest.raises(spec.SpecError):
+            spec.ObsSpec(hist_growth=1.0)
+        with pytest.raises(spec.SpecError):
+            spec.ObsSpec(hist_buckets=0)
+
+    def test_runtime_spec_embeds_obs(self):
+        s = spec.RuntimeSpec(num_domains=2,
+                             obs=spec.ObsSpec(enabled=True))
+        assert spec.RuntimeSpec.from_dict(s.to_dict()) == s
+        assert s.to_dict()["obs"]["enabled"] is True
+
+
+class TestSpanAssembly:
+    def test_every_observed_task_has_canonical_child_path(self):
+        _, t = _recorded()
+        forest = obs.assemble_spans(t)
+        assert len(forest) > 0
+        for span in forest:
+            names = [c.name for c in span.children]
+            assert names in (["queued", "exec"],
+                             ["queued", "steal", "exec"])
+            assert span.well_nested()
+
+    def test_forest_partitions_submitted_uids(self):
+        _, t = _recorded()
+        forest = obs.assemble_spans(t)
+        uids = {s.uid for s in t.submissions}
+        assert set(forest.spans) | set(forest.missing) == uids
+        assert not set(forest.spans) & set(forest.missing)
+
+    def test_assembly_is_deterministic(self):
+        _, t = _recorded()
+        assert obs.assemble_spans(t) == obs.assemble_spans(t)
+
+    def test_steal_spans_priced_by_embedded_topology(self):
+        s = spec.RuntimeSpec(
+            num_domains=4,
+            topology=spec.TopologySpec(kind="grouped", groups=(2, 2),
+                                       near=1.0, far=10.0),
+            penalty=spec.PenaltySpec(kind="constant", value=4.0),
+            trace=spec.TraceSpec(record=True),
+            obs=spec.ObsSpec(enabled=True))
+        _, t = _recorded(s)
+        forest = obs.assemble_spans(t)
+        steal_spans = [c for span in forest for c in span.children
+                       if c.name == "steal"]
+        assert steal_spans, "hot-skew run should steal"
+        for c in steal_spans:
+            assert c.attrs["level"] in (1, 2)
+            assert c.attrs["distance"] in (1.0, 10.0)
+        # cross-group steals must be priced as remote
+        assert any(c.attrs["level"] == 2 and c.attrs["distance"] == 10.0
+                   for c in steal_spans)
+
+    def test_batch_members_share_grab_metadata(self):
+        s = spec.RuntimeSpec(
+            num_domains=4, batch=spec.BatchSpec(kind="fixed", size=4),
+            penalty=spec.PenaltySpec(kind="constant", value=4.0),
+            trace=spec.TraceSpec(record=True),
+            obs=spec.ObsSpec(enabled=True))
+        _, t = _recorded(s)
+        forest = obs.assemble_spans(t)
+        sizes = set()
+        for span in forest:
+            ex = span.children[-1]
+            assert 0 <= ex.attrs["batch_index"] < ex.attrs["batch_size"]
+            sizes.add(ex.attrs["batch_size"])
+        assert max(sizes) > 1, "batch-4 run should have multi-task grabs"
+
+
+class TestObsPassivity:
+    """The load-bearing invariant: observation never perturbs the schedule."""
+
+    def _stats(self, base, obs_spec, tmp_path):
+        s = dataclasses.replace(base, obs=obs_spec)
+        try:
+            built = s.build()
+        except spec.SpecError as e:
+            if "trace_path" not in str(e):
+                raise
+            tmp_path.mkdir(parents=True, exist_ok=True)
+            built = s.build(trace_path=str(tmp_path))
+        trace.drive(built.executor, _workload(num_domains=s.num_domains))
+        return built, built.executor.metrics.snapshot()
+
+    @pytest.mark.parametrize("name", spec.policy_names())
+    def test_obs_on_off_bit_identical_stats(self, name, tmp_path):
+        base = spec.named(name)
+        _, off = self._stats(base, spec.ObsSpec(), tmp_path / "off")
+        _, on = self._stats(base, spec.ObsSpec(enabled=True),
+                            tmp_path / "on")
+        _, prof = self._stats(base,
+                              spec.ObsSpec(enabled=True, profile=True),
+                              tmp_path / "prof")
+        assert off == on == prof
+
+    def test_observed_trace_still_replays_exactly(self):
+        _, t = _recorded()
+        rep = trace.replay(trace.loads_lines(trace.dumps_lines(t)),
+                           assert_match=True)
+        assert rep.matches_recorded
+
+
+class TestObserve:
+    def test_report_counters_match_trace_stats(self):
+        _, t = _recorded()
+        rep = obs.observe(t)
+        snap = rep.snapshot()
+        m = snap["metrics"]
+        assert m["tasks_submitted"] == len(t.submissions)
+        assert (m["tasks_observed"] + m["tasks_unobserved"]
+                == m["tasks_submitted"])
+        assert m["events_dropped"] == 0
+        # no ring-buffer drop in a run this small: every execution event is
+        # retained, so the span-derived steal count equals the stats account
+        assert m["steals"] == t.stats["stolen"]
+        assert m["remote_steals"] == t.stats["remote_steals"]
+
+    def test_exact_percentiles_are_observed_sojourns(self):
+        _, t = _recorded()
+        rep = obs.observe(t)
+        sojourns = sorted(s.duration for s in rep.spans)
+        for key in ("p50", "p95", "p99"):
+            assert rep.percentiles["sojourn"][key] in sojourns
+
+    def test_histogram_vs_exact_percentile_bound(self):
+        """Bucket-resolution p50 never under-reports the exact p50 by more
+        than the clamp allows — it is >= the exact value's bucket lower
+        neighbourhood (conservative estimate contract)."""
+        _, t = _recorded()
+        rep = obs.observe(t)
+        h = rep.registry.histogram("sojourn")
+        assert h.quantile(50) >= rep.percentiles["sojourn"]["p50"] * 0.5
+
+    def test_observation_report_folds_profile(self):
+        built, t = _recorded(spec.RuntimeSpec(
+            num_domains=4,
+            penalty=spec.PenaltySpec(kind="constant", value=4.0),
+            trace=spec.TraceSpec(record=True),
+            obs=spec.ObsSpec(enabled=True, profile=True)))
+        rep = built.obs.report(t)
+        assert rep.profile is not None
+        assert set(rep.profile["calls"]) == set(obs.PATHS)
+        assert rep.profile["calls"]["steal_scan"] > 0
+        assert rep.profile["calls"]["event_append"] > 0
+        assert rep.profile["calls"]["submit_route"] > 0
+        assert "profile" in rep.snapshot()
+
+
+class TestProfiler:
+    def test_unit_accounting(self):
+        p = obs.HotPathProfiler()
+        p.add("steal_scan", 100)
+        p.add("steal_scan", 50)
+        assert p.calls["steal_scan"] == 2
+        assert p.ns_per_call()["steal_scan"] == 75.0
+        assert p.ns_per_call()["batch_grab"] == 0.0
+        assert p.total_ns == 150
+
+    def test_merge(self):
+        a, b = obs.HotPathProfiler(), obs.HotPathProfiler()
+        a.add("submit_route", 10)
+        b.add("submit_route", 30)
+        a.merge(b)
+        assert a.ns_per_call()["submit_route"] == 20.0
+
+    def test_snapshot_shape(self):
+        snap = obs.HotPathProfiler().snapshot()
+        assert set(snap) == {"ns", "calls", "ns_per_call"}
+        json.dumps(snap)
+
+    def test_unprofiled_executor_pays_no_timer(self):
+        built = spec.RuntimeSpec(num_domains=2).build()
+        assert built.obs is None
+        assert built.executor.profiler is None
+
+
+class TestChromeExport:
+    def _events(self):
+        _, t = _recorded()
+        return t, obs.chrome_trace_events(t)
+
+    def test_slices_match_executions(self):
+        t, evs = self._events()
+        exec_events = [e for e in t.events
+                       if e.kind in obs.spans.EXEC_KINDS]
+        slices = [e for e in evs if e["ph"] == "X"]
+        assert len(slices) == len(exec_events)
+        for s in slices:
+            assert s["dur"] > 0
+
+    def test_steal_flow_arrows_pair_up(self):
+        t, evs = self._events()
+        starts = [e for e in evs if e["ph"] == "s"]
+        ends = [e for e in evs if e["ph"] == "f"]
+        stolen = [e for e in t.events if trace.event_stolen(e)]
+        assert len(starts) == len(ends) == len(stolen)
+        assert {e["id"] for e in starts} == {e["id"] for e in ends}
+
+    def test_metadata_names_every_domain_and_worker(self):
+        t, evs = self._events()
+        meta = [e for e in evs if e["ph"] == "M"]
+        pids = {e["pid"] for e in meta if e["name"] == "process_name"}
+        assert pids == set(range(t.meta["num_domains"]))
+
+    def test_export_writes_valid_json(self, tmp_path):
+        t, _ = self._events()
+        path = tmp_path / "timeline.perfetto-trace"
+        obs.export_chrome_trace(t, path)
+        doc = json.loads(path.read_text())
+        assert doc["traceEvents"]
+        assert doc["otherData"]["num_domains"] == t.meta["num_domains"]
+        assert doc["otherData"]["governor"] == t.meta.get("governor", "")
+
+
+class TestSchemaV4:
+    def test_observed_header_carries_obs_block(self):
+        built, t = _recorded()
+        lines = trace.dumps_lines(t)
+        head = json.loads(lines[0])
+        assert head["schema"] == 4
+        assert head["obs"] == built.spec.obs.to_dict()
+        t2 = trace.loads_lines(lines)
+        assert t2.obs_dict == built.spec.obs.to_dict()
+
+    def test_unobserved_header_has_no_obs_block(self):
+        s = spec.RuntimeSpec(num_domains=4,
+                             trace=spec.TraceSpec(record=True))
+        _, t = _recorded(s)
+        head = json.loads(trace.dumps_lines(t)[0])
+        assert "obs" not in head
+        assert t.obs_dict is None
+
+    def test_v3_trace_still_loads_and_replays(self):
+        _, t = _recorded()
+        lines = trace.dumps_lines(t)
+        head = json.loads(lines[0])
+        head["schema"] = 3
+        head.pop("obs")
+        head["spec"].pop("obs")              # a v3 writer never knew obs
+        t3 = trace.loads_lines([json.dumps(head)] + lines[1:])
+        assert t3.obs_dict is None
+        assert trace.replay(t3, assert_match=True).matches_recorded
+
+    def test_events_dropped_property(self):
+        _, t = _recorded()
+        assert t.events_dropped == 0
+
+
+class TestOverflowAccounting:
+    def _overflowed_log(self):
+        log = EventLog(maxlen=4)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            for i in range(7):
+                log.emit(i, "run", 0, 0, i)
+        return log
+
+    def test_one_shot_overflow_warning(self):
+        log = EventLog(maxlen=3)
+        for i in range(3):
+            log.emit(i, "run", 0, 0, i)
+        with pytest.warns(RuntimeWarning, match="overflow"):
+            log.emit(3, "run", 0, 0, 3)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")   # a second warning would raise
+            log.emit(4, "run", 0, 0, 4)
+        assert log.dropped == 2
+
+    def test_storm_windows_refuse_holed_event_log(self):
+        log = self._overflowed_log()
+        with pytest.raises(trace.DroppedEventsError, match="ring buffer"):
+            trace.windows(log, width=2)
+        # explicit materialization is the documented override
+        assert trace.windows(list(log), width=2)
+
+    def test_storm_windows_refuse_dropped_trace(self):
+        class Holed:
+            events_dropped = 3
+            events = []
+        with pytest.raises(trace.DroppedEventsError):
+            trace.windows(Holed(), width=2)
+
+    def test_whole_log_passes_without_drops(self):
+        log = EventLog(maxlen=64)
+        for i in range(8):
+            log.emit(i, "run", 0, 0, i)
+        assert trace.windows(log, width=4)
+
+    def test_observe_counts_dropped_events(self):
+        s = spec.RuntimeSpec(
+            num_domains=4, event_maxlen=16,
+            penalty=spec.PenaltySpec(kind="constant", value=4.0),
+            trace=spec.TraceSpec(record=True),
+            obs=spec.ObsSpec(enabled=True))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            _, t = _recorded(s, steps=24)
+        assert t.events_dropped > 0
+        rep = obs.observe(t)
+        m = rep.registry.snapshot()
+        assert m["events_dropped"] == t.events_dropped
+        assert m["tasks_unobserved"] > 0
+        assert rep.spans.missing

@@ -1,0 +1,105 @@
+"""Property-based tests (hypothesis) for the span-tree invariants.
+
+``repro.obs.spans`` promises, for any recorded run: every task span is
+well-nested, every child path is the canonical ``queued [steal] exec``
+sequence, the forest exactly partitions the submitted uids into observed +
+missing, and assembly is a pure function of the trace.  This file drives
+randomized policies (steal order, batching, topology) over randomized
+hot-skew workloads and gates those invariants; it also gates the obs
+passivity invariant (obs-on == obs-off stats) pointwise over the same
+random policy space.
+"""
+import dataclasses
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import obs, spec, trace
+from repro.obs.spans import EXEC_KINDS
+
+
+def _workload(steps, seed, p_hot, num_domains=4):
+    return trace.lognormal_costs(
+        trace.hot_skew(trace.poisson(rate=num_domains, steps=steps,
+                                     num_domains=num_domains, seed=seed),
+                       hot_domain=0, p_hot=p_hot, seed=seed),
+        median=2.0, sigma=0.75, seed=seed)
+
+
+def _spec(steal_order, batch, grouped, *, obs_spec):
+    topo = (spec.TopologySpec(kind="grouped", groups=(2, 2), near=1.0,
+                              far=8.0) if grouped else None)
+    return spec.RuntimeSpec(
+        num_domains=4, steal_order=steal_order, topology=topo,
+        batch=spec.BatchSpec(kind="fixed", size=batch),
+        penalty=spec.PenaltySpec(kind="constant", value=4.0),
+        trace=spec.TraceSpec(record=True), obs=obs_spec)
+
+
+POLICY = dict(steal_order=st.sampled_from(["cyclic", "longest"]),
+              batch=st.sampled_from([1, 3]),
+              grouped=st.booleans())
+WORKLOAD = dict(steps=st.integers(4, 24), seed=st.integers(0, 12),
+                p_hot=st.floats(0.0, 1.0))
+
+
+class TestSpanProperties:
+    @settings(max_examples=15, deadline=None)
+    @given(**POLICY, **WORKLOAD)
+    def test_span_tree_invariants(self, steal_order, batch, grouped, steps,
+                                  seed, p_hot):
+        s = _spec(steal_order, batch, grouped,
+                  obs_spec=spec.ObsSpec(enabled=True))
+        built = s.build()
+        trace.drive(built.executor, _workload(steps, seed, p_hot))
+        t = built.recorder.finish()
+        forest = obs.assemble_spans(t)
+
+        uids = {sub.uid for sub in t.submissions}
+        assert set(forest.spans) | set(forest.missing) == uids
+        assert not set(forest.spans) & set(forest.missing)
+        submitted = {sub.uid: sub for sub in t.submissions}
+        for span in forest:
+            assert span.well_nested()
+            assert span.duration >= 0
+            names = [c.name for c in span.children]
+            assert names in (["queued", "exec"],
+                             ["queued", "steal", "exec"])
+            assert span.start == float(submitted[span.attrs["uid"]].step)
+            ex = span.children[-1]
+            assert ex.attrs["kind"] in EXEC_KINDS
+            assert 0 <= ex.attrs["batch_index"] < ex.attrs["batch_size"]
+            assert ex.end == span.end
+
+    @settings(max_examples=10, deadline=None)
+    @given(**POLICY, **WORKLOAD)
+    def test_assembly_is_pure(self, steal_order, batch, grouped, steps,
+                              seed, p_hot):
+        s = _spec(steal_order, batch, grouped,
+                  obs_spec=spec.ObsSpec(enabled=True))
+        built = s.build()
+        trace.drive(built.executor, _workload(steps, seed, p_hot))
+        t = built.recorder.finish()
+        assert obs.assemble_spans(t) == obs.assemble_spans(t)
+        a = obs.observe(t).registry.snapshot()
+        b = obs.observe(t).registry.snapshot()
+        assert a == b
+
+
+class TestObsPassivityProperties:
+    @settings(max_examples=10, deadline=None)
+    @given(**POLICY, **WORKLOAD,
+           profile=st.booleans())
+    def test_obs_never_perturbs_the_schedule(self, steal_order, batch,
+                                             grouped, steps, seed, p_hot,
+                                             profile):
+        outs = []
+        for o in (spec.ObsSpec(),
+                  spec.ObsSpec(enabled=True, profile=profile)):
+            built = _spec(steal_order, batch, grouped, obs_spec=o).build()
+            trace.drive(built.executor, _workload(steps, seed, p_hot))
+            outs.append(built.executor.metrics.snapshot())
+        assert outs[0] == outs[1]

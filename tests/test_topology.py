@@ -353,11 +353,13 @@ class TestTraceBackCompat:
         t = self._hier_run()
         lines = trace.dumps_lines(t)
         head = json.loads(lines[0])
-        assert head["schema"] == 3
+        assert head["schema"] == 4
         head["schema"] = 2
         head.pop("topology")
-        # drop the spec's topology block too: a real v2 writer never knew it
+        # drop the spec's topology and obs blocks too: a real v2 writer
+        # never knew them
         head["spec"].pop("topology")
+        head["spec"].pop("obs")
         t2 = trace.loads_lines([json.dumps(head)] + lines[1:])
         assert t2.topology_dict is None
         ex = trace.executor_from_spec(t2)
@@ -380,7 +382,7 @@ class TestTraceBackCompat:
         t = self._hier_run()
         lines = trace.dumps_lines(t)
         head = json.loads(lines[0])
-        head["schema"] = 4
+        head["schema"] = 5
         with pytest.raises(trace.TraceSchemaError, match="schema"):
             trace.loads_lines([json.dumps(head)] + lines[1:])
 

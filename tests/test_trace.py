@@ -473,11 +473,11 @@ class TestSchemaV2SpecHeaders:
         # replays the schedule but cannot match the penalty account.
         assert not trace.replay(t).matches_recorded
 
-    def test_written_traces_are_v3(self, tmp_path):
+    def test_written_traces_are_v4(self, tmp_path):
         _, t = self._spec_run()
-        path = tmp_path / "v3.jsonl"
+        path = tmp_path / "v4.jsonl"
         trace.TraceWriter(path).write(t)
         import json
         head = json.loads(open(path).readline())
-        assert head["schema"] == trace.SCHEMA_VERSION == 3
+        assert head["schema"] == trace.SCHEMA_VERSION == 4
         assert head["spec"]["spec_version"] == 1
