@@ -2,7 +2,8 @@
 # works without an editable install.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test smoke bench trace control spec experiments topology obs overhead
+.PHONY: test smoke bench trace control spec experiments topology obs \
+	overhead sentinel
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -53,7 +54,8 @@ topology:
 
 # observability smoke: observe a recorded run end to end (span trees,
 # registry metrics, exact p50/p95/p99, self-profiled overhead) and export
-# the Perfetto timeline (obs_timeline.perfetto-trace; CI uploads it)
+# the Perfetto timeline (artifacts/obs_timeline.perfetto-trace; CI
+# uploads it)
 obs:
 	$(PY) examples/obs_timeline.py
 
@@ -63,3 +65,12 @@ obs:
 # artifact comes from the full `python -m benchmarks.scheduler_overhead`.
 overhead:
 	$(PY) -m benchmarks.scheduler_overhead --fast
+
+# BENCH regression sentinel: re-run every benchmark at its committed
+# baseline's own declared parameters, compare each numeric metric under
+# the per-metric tolerance policy (deterministic metrics exact, wall
+# metrics loose lower-is-better), write the BENCH_sentinel.md report,
+# append to the BENCH_trajectory.json history, and exit nonzero on any
+# regression.  Refreshing a baseline stays an explicit bench run + commit.
+sentinel:
+	$(PY) -m benchmarks.sentinel

@@ -5,6 +5,7 @@
     PYTHONPATH=src python -m benchmarks.run --policy controlled_replay
     PYTHONPATH=src python -m benchmarks.run --experiment replay_hot_skew
     PYTHONPATH=src python -m benchmarks.run --experiment all
+    PYTHONPATH=src python -m benchmarks.run --compare A.jsonl B.jsonl
 
 Prints ``name,us_per_call,derived`` CSV summary lines plus each benchmark's
 own CSV block.  ``--full`` uses the paper's full 14400-task grid and 100
@@ -24,6 +25,12 @@ header-only replay-conformance check.  ``all`` runs every checked-in
 ``specs/experiments/*.json`` golden file (the registry outside a repo
 checkout) and refreshes the machine-readable ``BENCH_experiments.json``
 artifact; single-name/file runs leave the committed artifact untouched.
+
+``--compare A B`` is the ad-hoc trace-diff entry: each argument is a
+recorded JSONL trace file (or rotating-segment directory), and the output
+is ``repro.obs.diff_traces`` rendered as markdown — stats deltas, phase
+histogram movement, steal-matrix movement, and percentile shifts under
+the deterministic min-effect threshold.
 """
 from __future__ import annotations
 
@@ -113,6 +120,23 @@ def _cli_experiments(argv: list[str]):
             "(or pass a JSON file path, or 'all')") from None
 
 
+def compare_traces(path_a: str, path_b: str) -> str:
+    """The ``--compare`` body: read two recorded traces and render their
+    ``diff_traces`` comparison as markdown (labels are the file names)."""
+    from repro.obs import diff_traces, render_diff
+    from repro.trace import TraceReader, TraceSchemaError
+
+    traces = []
+    for path in (path_a, path_b):
+        try:
+            traces.append(TraceReader(path).read())
+        except (TraceSchemaError, OSError) as e:
+            raise SystemExit(f"--compare: {path}: {e}") from None
+    diff = diff_traces(traces[0], traces[1])
+    return render_diff(diff, label_a=os.path.basename(path_a),
+                       label_b=os.path.basename(path_b))
+
+
 def run_experiments(experiments: dict,
                     json_path: str | None = None) -> list[str]:
     """Execute declarative experiments end to end.
@@ -130,11 +154,15 @@ def run_experiments(experiments: dict,
     locality, remote steals and the exact sojourn p50/p95/p99 (pooled task
     timings over every repeat's replayed trace, via ``repro.obs``'s
     nearest-rank percentiles).  The same sojourn percentiles land per run
-    in ``BENCH_experiments.json``.
+    in ``BENCH_experiments.json``, alongside an ``aggregates`` block
+    (``spec.aggregate_runs``: mean/min/max/stdev per numeric stat over the
+    seed-shifted repeats — the Fig. 4 variability ladder the sentinel's
+    tolerances are calibrated against).
     """
     import json
 
     from repro.obs import percentiles
+    from repro.spec import aggregate_runs
     from repro.trace import dumps_lines, loads_lines, replay
 
     lines = ["experiment,repeat,tasks,steps,throughput,local_frac,"
@@ -173,7 +201,8 @@ def run_experiments(experiments: dict,
                          "replay_exact": rep.matches_recorded,
                          "sojourn": (percentiles(run_sojourns)
                                      if run_sojourns else None), **s})
-        results[name] = {"experiment": exp.to_dict(), "runs": runs}
+        results[name] = {"experiment": exp.to_dict(), "runs": runs,
+                         "aggregates": result.aggregates()}
         p = percentiles(sojourns) if sojourns else \
             {"p50": float("nan"), "p95": float("nan"), "p99": float("nan")}
         summary_rows.append(
@@ -221,6 +250,13 @@ def run_with_spec(spec, full: bool = False) -> None:
 
 def main() -> None:
     full = "--full" in sys.argv
+    if "--compare" in sys.argv:
+        i = sys.argv.index("--compare")
+        if len(sys.argv) < i + 3:
+            raise SystemExit("--compare needs two trace paths "
+                             "(JSONL files or segment directories)")
+        print(compare_traces(sys.argv[i + 1], sys.argv[i + 2]), end="")
+        return
     cli_experiments = _cli_experiments(sys.argv[1:])
     if cli_experiments is not None:
         # only the full `all` gate refreshes the committed artifact; a

@@ -1,6 +1,6 @@
 """Observe a run end to end: spans -> metrics -> a Perfetto timeline.
 
-    PYTHONPATH=src python examples/obs_timeline.py [out.perfetto-trace]
+    PYTHONPATH=src python examples/obs_timeline.py [--out out.perfetto-trace]
 
 One observed, profiled run over the two-socket topology, then the whole
 ``repro.obs`` surface on its recorded trace:
@@ -21,15 +21,25 @@ One observed, profiled run over the two-socket topology, then the whole
 
 The export is pure post-processing of the recorded trace: running this
 example twice produces byte-identical timelines (only the profiler's wall
-timings differ — they are measurements, not schedule inputs).
+timings differ — they are measurements, not schedule inputs).  ``--out``
+picks the destination; the default lands in ``artifacts/`` (gitignored)
+so example runs don't litter the checkout.
 """
-import sys
+import argparse
+import os
 
 from repro import obs, spec, trace
 
+DEFAULT_OUT = os.path.join("artifacts", "obs_timeline.perfetto-trace")
+
 
 def main():
-    out = sys.argv[1] if len(sys.argv) > 1 else "obs_timeline.perfetto-trace"
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help=f"timeline destination (default: {DEFAULT_OUT})")
+    out = ap.parse_args().out
+    if os.path.dirname(out):
+        os.makedirs(os.path.dirname(out), exist_ok=True)
 
     s = spec.RuntimeSpec(
         num_domains=4,

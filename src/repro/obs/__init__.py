@@ -29,6 +29,16 @@ passively attached), so observation never perturbs the observed schedule:
                                          ``Observation`` is the live form a
                                          spec-built system carries
                                          (``RuntimeSpec.obs`` → ``Built.obs``)
+  *why* did time go there — per-task     ``decompose(trace)`` →
+  sojourn attribution                    ``BlameReport`` (queue-wait /
+                                         steal-transfer / exec, bit-exact)
+  "what changed between these runs?"     ``diff_traces(a, b)`` →
+                                         ``TraceDiff`` (stats/histogram/
+                                         steal-matrix deltas, percentile
+                                         shifts with min-effect threshold)
+  human-facing regression reports        ``render_blame`` / ``render_diff``
+                                         (deterministic markdown; the CI
+                                         sentinel's artifact format)
 
 Usage::
 
@@ -41,16 +51,22 @@ Usage::
     obs.export_chrome_trace(trace, "run.perfetto-trace")
 """
 from .chrome import chrome_trace_events, export_chrome_trace
+from .critpath import PHASES, BlameReport, TaskBlame, decompose
+from .diff import HistDelta, Shift, TraceDiff, diff_traces
 from .metrics import Counter, Gauge, Histogram, Registry, percentile, \
     percentiles
 from .observe import ObsReport, Observation, observe
 from .profile import PATHS, HotPathProfiler
+from .report import markdown_table, render_blame, render_diff
 from .spans import Span, SpanForest, assemble_spans, spans_from
 
 __all__ = [
     "chrome_trace_events", "export_chrome_trace",
+    "PHASES", "BlameReport", "TaskBlame", "decompose",
+    "HistDelta", "Shift", "TraceDiff", "diff_traces",
     "Counter", "Gauge", "Histogram", "Registry", "percentile", "percentiles",
     "ObsReport", "Observation", "observe",
     "PATHS", "HotPathProfiler",
+    "markdown_table", "render_blame", "render_diff",
     "Span", "SpanForest", "assemble_spans", "spans_from",
 ]

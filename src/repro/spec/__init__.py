@@ -39,14 +39,16 @@ specs (a JSON file, not a code change).
 """
 from .build import (Built, build, build_governor, build_penalty,
                     build_topology, checkpoint)
-from .experiments import (EXPERIMENT_VERSION, CostsSpec, ExperimentResult,
-                          ExperimentSpec, RunResult, SkewSpec, WorkloadSpec,
+from .experiments import (AGGREGATE_STATS, EXPERIMENT_VERSION, CostsSpec,
+                          ExperimentResult, ExperimentSpec, RunResult,
+                          SkewSpec, WorkloadSpec, aggregate_runs,
                           control_experiments, control_workloads,
                           dump_experiment, experiment, experiment_names,
                           load_experiment, replay_experiments,
                           replay_workloads, runtime_experiments,
                           runtime_workloads, standard_workloads,
-                          topology_experiments, topology_workloads)
+                          topology_experiments, topology_workloads,
+                          variability_experiments)
 from .model import (SPEC_VERSION, BatchSpec, BatchStateSpec, BreakerSpec,
                     BreakerStateSpec, GovernorSpec, GovernorStateSpec,
                     ObsSpec, PenaltySpec, RouterSpec, RuntimeSpec,
@@ -57,13 +59,14 @@ from .registry import named, policy_names
 __all__ = [
     "Built", "build", "build_governor", "build_penalty", "build_topology",
     "checkpoint",
-    "EXPERIMENT_VERSION", "CostsSpec", "ExperimentResult", "ExperimentSpec",
-    "RunResult", "SkewSpec", "WorkloadSpec",
+    "AGGREGATE_STATS", "EXPERIMENT_VERSION", "CostsSpec", "ExperimentResult",
+    "ExperimentSpec", "RunResult", "SkewSpec", "WorkloadSpec",
+    "aggregate_runs",
     "control_experiments", "control_workloads", "dump_experiment",
     "experiment", "experiment_names", "load_experiment",
     "replay_experiments", "replay_workloads", "runtime_experiments",
     "runtime_workloads", "standard_workloads",
-    "topology_experiments", "topology_workloads",
+    "topology_experiments", "topology_workloads", "variability_experiments",
     "SPEC_VERSION", "BatchSpec", "BatchStateSpec", "BreakerSpec",
     "BreakerStateSpec", "GovernorSpec", "GovernorStateSpec", "ObsSpec",
     "PenaltySpec", "RouterSpec", "RuntimeSpec", "ServingSpec", "SpecError",

@@ -217,6 +217,36 @@ class RunResult:
         return self.built.executor
 
 
+AGGREGATE_STATS = ("mean", "min", "max", "stdev")
+
+
+def aggregate_runs(stats: list[dict]) -> dict[str, dict[str, float]]:
+    """Fig. 4-style run-to-run aggregates across seed-shifted repeats.
+
+    For every numeric key shared by all the per-run stats dicts, the exact
+    mean / min / max / population stdev over the repeats (stdev 0 for a
+    single run — a degenerate ladder is still well-defined).  Booleans are
+    excluded (``replay_exact`` is a gate, not a measurement); key order is
+    sorted, so the output is deterministic and golden-file friendly.
+    """
+    if not stats:
+        return {}
+    keys = set(stats[0])
+    for s in stats[1:]:
+        keys &= set(s)
+    out: dict[str, dict[str, float]] = {}
+    for key in sorted(keys):
+        vals = [s[key] for s in stats]
+        if not all(isinstance(v, (int, float)) and not isinstance(v, bool)
+                   for v in vals):
+            continue
+        n = len(vals)
+        mean = sum(vals) / n
+        out[key] = {"mean": mean, "min": min(vals), "max": max(vals),
+                    "stdev": (sum((v - mean) ** 2 for v in vals) / n) ** 0.5}
+    return out
+
+
 @dataclasses.dataclass
 class ExperimentResult:
     """All repeats of one ``ExperimentSpec.run()``."""
@@ -229,6 +259,13 @@ class ExperimentResult:
     def primary(self) -> RunResult:
         """The first (un-shifted-seed) repeat."""
         return self.runs[0]
+
+    def aggregates(self) -> dict[str, dict[str, float]]:
+        """``aggregate_runs`` over this result's per-repeat stats — the
+        variability ladder the repeated experiments feed into
+        ``BENCH_experiments.json`` (and the sentinel's tolerance choices).
+        """
+        return aggregate_runs([r.stats for r in self.runs])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -456,6 +493,18 @@ def topology_experiments(steps: int = 48,
     return reg
 
 
+def variability_experiments(steps: int = 48, seed: int = 0,
+                            repeats: int = 5) -> dict[str, ExperimentSpec]:
+    """The run-to-run variability axis (paper Fig. 4): the storm-prone
+    hot-skew workload under the canonical locality policy, re-run under
+    ``repeats`` seed-shifted copies so ``ExperimentResult.aggregates()``
+    yields a real mean/min/max/stdev ladder instead of a single point."""
+    policy = dataclasses.replace(named("paper_cyclic"), seed=seed)
+    wl = standard_workloads(4, steps, seed)["hot_skew"]
+    return {"variability_hot_skew": ExperimentSpec(
+        policy=policy, workload=wl, repeats=repeats)}
+
+
 def _build_registry() -> dict[str, ExperimentSpec]:
     reg: dict[str, ExperimentSpec] = {}
     for name, wl in standard_workloads().items():
@@ -467,6 +516,7 @@ def _build_registry() -> dict[str, ExperimentSpec]:
     for name, exp in control_experiments().items():
         reg[f"control_{name}"] = exp
     reg.update(topology_experiments())
+    reg.update(variability_experiments())
     return reg
 
 

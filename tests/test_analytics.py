@@ -1,0 +1,255 @@
+"""Trace analytics: critical-path blame exactness, A/B diff invariants,
+report rendering determinism, and the sentinel's tolerance policy.
+
+The two load-bearing invariants (ISSUE 8 acceptance criteria):
+
+  * ``obs.decompose`` phase splits sum *bit-exactly* to the recorded
+    sojourn (``trace.replay.TaskTiming``) for every registry policy ×
+    standard workload cell;
+  * ``obs.diff_traces(t, t)`` is all-zero for every registry policy.
+
+Plus the sentinel unit contract: deterministic metrics fail on any drift,
+wall metrics gate loosely lower-is-better, a deleted metric fails, a new
+metric passes — so ``make sentinel`` fails on an injected regression and
+nothing else.
+"""
+import os
+
+import pytest
+
+from benchmarks import sentinel
+from repro import obs, spec, trace
+from repro.trace.replay import task_times
+
+SPECS_DIR = os.path.join(os.path.dirname(__file__), os.pardir, "specs")
+MATRIX_WORKLOADS = ("poisson", "bursty", "diurnal", "hot_skew")
+
+
+def _recorded(policy: str, workload: str, steps: int = 16):
+    """One recorded trace of a registry policy driving a standard
+    workload (through the JSONL wire format, like a real analysis)."""
+    s = spec.named(policy)
+    wl = spec.standard_workloads(num_domains=s.num_domains, steps=steps,
+                                 seed=9)[workload].build()
+    built = s.build()
+    rec = built.recorder
+    if rec is None:
+        rec = trace.TraceRecorder()
+        rec.attach(built.executor)
+    trace.drive(built.executor, wl)
+    return trace.loads_lines(trace.dumps_lines(rec.finish()))
+
+
+class TestCritpathExactness:
+    """decompose() is an *identity* on the recorded sojourn, not a model:
+    per task, queue_wait + (exec + steal_transfer) reproduces
+    ``TaskTiming.sojourn`` bit-for-bit, on every policy × workload cell."""
+
+    @pytest.mark.parametrize("workload", MATRIX_WORKLOADS)
+    @pytest.mark.parametrize("policy", spec.policy_names())
+    def test_phases_sum_bit_exactly_to_sojourn(self, policy, workload):
+        t = _recorded(policy, workload)
+        rep = obs.decompose(t)
+        timings = task_times(t.submissions, t.events)
+        assert set(rep.tasks) == set(timings), (policy, workload)
+        for uid, blame in rep.tasks.items():
+            tt = timings[uid]
+            assert blame.sojourn == tt.sojourn, (policy, workload, uid)
+            assert blame.queue_wait == tt.wait
+            assert blame.exec + blame.steal_transfer == tt.service
+
+    def test_observed_plus_missing_partitions_submissions(self):
+        t = _recorded("paper_cyclic", "hot_skew")
+        rep = obs.decompose(t)
+        uids = {s.uid for s in t.submissions}
+        assert set(rep.tasks) | set(rep.missing) == uids
+        assert not set(rep.tasks) & set(rep.missing)
+
+    def test_blame_tables_reconcile_to_totals(self):
+        t = _recorded("topology_two_level", "hot_skew")
+        rep = obs.decompose(t)
+        for table in (rep.by_domain, rep.by_level):
+            total = sum(r["total"] for r in table.values())
+            assert total == pytest.approx(rep.total_sojourn, rel=1e-12)
+            assert sum(r["tasks"] for r in table.values()) == len(rep.tasks)
+        # every phase column reconciles too
+        for phase in obs.PHASES:
+            assert sum(r[phase] for r in rep.by_level.values()) \
+                == pytest.approx(rep.totals[phase], rel=1e-12)
+
+    def test_levels_priced_by_header_topology(self):
+        t = _recorded("topology_two_level", "hot_skew")
+        rep = obs.decompose(t)
+        assert t.topology_dict is not None
+        # the hot-skew run on the two-socket machine crosses sockets
+        assert any(lv >= 2 for lv in rep.by_level), rep.by_level.keys()
+        for blame in rep.tasks.values():
+            if blame.level == 0:
+                assert blame.steal_transfer == 0.0
+
+    def test_flat_trace_prices_every_steal_level_1(self):
+        t = _recorded("paper_cyclic", "hot_skew")
+        assert t.topology_dict is None
+        rep = obs.decompose(t)
+        assert set(rep.by_level) <= {0, 1}
+
+    def test_dominant_and_top_are_deterministic(self):
+        t = _recorded("controlled_replay", "bursty")
+        a, b = obs.decompose(t), obs.decompose(t)
+        assert [x.uid for x in a.top(5)] == [x.uid for x in b.top(5)]
+        assert a.dominant_contributors() == b.dominant_contributors()
+        assert a.snapshot() == b.snapshot()
+
+
+class TestDiffTraces:
+    @pytest.mark.parametrize("policy", spec.policy_names())
+    def test_self_diff_is_all_zero(self, policy):
+        t = _recorded(policy, "hot_skew", steps=12)
+        d = obs.diff_traces(t, t)
+        assert d.is_zero, policy
+        assert d.significant_shifts() == {}
+        assert d.snapshot()["is_zero"] is True
+
+    def test_different_policies_produce_nonzero_diff(self):
+        a = _recorded("paper_cyclic", "hot_skew")
+        b = _recorded("controlled_replay", "hot_skew")
+        assert not obs.diff_traces(a, b).is_zero
+
+    def test_min_effect_threshold_gates_significance(self):
+        # below both thresholds: not significant
+        from repro.obs.diff import _shift
+        assert not _shift(100.0, 100.4, 0.5, 0.02).significant
+        assert not _shift(100.0, 101.9, 0.5, 0.02).significant  # < 2% rel
+        # clears max(abs, rel)
+        assert _shift(100.0, 102.1, 0.5, 0.02).significant
+        assert _shift(0.0, 0.5, 0.5, 0.02).significant
+        assert not _shift(0.0, 0.4, 0.5, 0.02).significant
+
+    def test_steal_matrix_priced_per_side(self):
+        flat = _recorded("paper_cyclic", "hot_skew")
+        topo = _recorded("topology_two_level", "hot_skew")
+        d = obs.diff_traces(flat, topo)
+        # flat side contributes only level 1; topo side reaches level 2
+        assert any(lv >= 2 and s.b > 0 for lv, s in d.steal_levels.items())
+        assert all(s.a == 0 for lv, s in d.steal_levels.items() if lv >= 2)
+
+    def test_histogram_deltas_share_fixed_buckets(self):
+        a = _recorded("paper_cyclic", "poisson")
+        b = _recorded("controlled_replay", "poisson")
+        d = obs.diff_traces(a, b)
+        for h in d.phases.values():
+            assert h.count_a == d.tasks.a and h.count_b == d.tasks.b
+            # conservation: net bucket movement equals the count delta
+            assert sum(r[3] for r in h.buckets) == h.count_b - h.count_a
+
+
+class TestReports:
+    def test_render_blame_is_deterministic_markdown(self):
+        t = _recorded("topology_pods_adaptive", "bursty")
+        one = obs.render_blame(obs.decompose(t))
+        two = obs.render_blame(obs.decompose(t))
+        assert one == two
+        assert one.startswith("## Critical-path blame")
+        for section in ("### By domain", "### By topology level",
+                        "### Dominant contributors"):
+            assert section in one
+
+    def test_render_diff_flags_identity(self):
+        t = _recorded("paper_cyclic", "poisson", steps=8)
+        text = obs.render_diff(obs.diff_traces(t, t), "x", "y")
+        assert "**Identical**" in text
+        a = _recorded("paper_cyclic", "hot_skew")
+        b = _recorded("controlled_replay", "hot_skew")
+        assert "**Identical**" not in obs.render_diff(obs.diff_traces(a, b))
+
+    def test_markdown_table_shape(self):
+        text = obs.markdown_table(["a", "b"], [[1, 2.5], ["x", "y"]])
+        lines = text.splitlines()
+        assert lines[0] == "| a | b |"
+        assert lines[1].count("---") == 2
+        assert lines[2] == "| 1 | 2.5 |"
+
+
+class TestSentinel:
+    """The tolerance policy, pure-unit: no benchmark re-runs."""
+
+    def test_flatten_skips_bools_and_experiment_blocks(self):
+        flat = sentinel.flatten({"a": 1, "ok": True, "experiment": {"n": 9},
+                                 "nest": {"b": 2.5}, "row": [3, {"c": 4}]})
+        assert flat == {"a": 1.0, "nest.b": 2.5, "row[0]": 3.0,
+                        "row[1].c": 4.0}
+
+    def test_exact_metric_fails_on_any_drift(self):
+        base = {"results": {"x": {"makespan": 27}}}
+        ok = sentinel.compare(base, {"results": {"x": {"makespan": 27}}},
+                              "control")
+        assert all(f.status == "ok" for f in ok)
+        bad = sentinel.compare(base, {"results": {"x": {"makespan": 28}}},
+                               "control")
+        assert [f.status for f in bad] == ["regression"]
+
+    def test_injected_regression_fails_and_improvement_passes(self):
+        base = {"rows": {"1000x4": {"ns_per_decision": {"steal_scan": 100.0}}}}
+        worse = {"rows": {"1000x4":
+                          {"ns_per_decision": {"steal_scan": 100.0 * 3.5}}}}
+        better = {"rows": {"1000x4":
+                           {"ns_per_decision": {"steal_scan": 50.0}}}}
+        within = {"rows": {"1000x4":
+                           {"ns_per_decision": {"steal_scan": 200.0}}}}
+        assert [f.status for f in sentinel.compare(base, worse, "overhead")] \
+            == ["regression"]
+        assert [f.status for f in sentinel.compare(base, better, "overhead")] \
+            == ["improvement"]
+        assert [f.status for f in sentinel.compare(base, within, "overhead")] \
+            == ["ok"]
+
+    def test_wall_readouts_are_informational(self):
+        base = {"results": [{"wall_off_s": 0.1, "tasks_per_s": 1e5,
+                             "overhead_frac": -0.01, "repeats_used": 5}]}
+        fresh = {"results": [{"wall_off_s": 9.9, "tasks_per_s": 1.0,
+                              "overhead_frac": 0.04, "repeats_used": 40}]}
+        findings = sentinel.compare(base, fresh, "overhead")
+        assert findings and all(f.status == "info" for f in findings)
+
+    def test_missing_metric_fails_new_metric_passes(self):
+        base, fresh = {"a": 1}, {"a": 1, "b": 2}
+        statuses = {f.metric: f.status
+                    for f in sentinel.compare(base, fresh, "control")}
+        assert statuses == {"a": "ok", "b": "new"}
+        statuses = {f.metric: f.status
+                    for f in sentinel.compare(fresh, base, "control")}
+        assert statuses["b"] == "missing"
+        assert any(f.failed for f in sentinel.compare(fresh, base, "control"))
+
+    def test_overhead_rows_intersect_on_configuration(self):
+        base = {"bench": "x", "results": [
+            {"n_tasks": 1000, "num_domains": 4, "v": 1},
+            {"n_tasks": 100000, "num_domains": 16, "v": 2}]}
+        fresh = {"bench": "x", "results": [
+            {"n_tasks": 1000, "num_domains": 4, "v": 3}]}
+        nb, nf = sentinel._intersect_overhead(base, fresh)
+        assert list(nb["rows"]) == list(nf["rows"]) == ["1000x4"]
+
+    def test_report_verdict_and_exit_semantics(self):
+        ok = {"control": [sentinel.Finding("control", "m", 1.0, 1.0,
+                                           "equal", "ok")]}
+        bad = {"control": [sentinel.Finding("control", "m", 1.0, 2.0,
+                                            "equal", "regression")]}
+        assert "**PASS**" in sentinel.render_report(ok, {})
+        text = sentinel.render_report(bad, {"topology": "no baseline"})
+        assert "**FAIL**" in text and "Non-ok findings" in text
+        assert "skipped `topology`" in text
+
+    def test_trajectory_appends(self, tmp_path):
+        path = str(tmp_path / "traj.json")
+        findings = {"control": [sentinel.Finding("control", "m", 1.0, 1.0,
+                                                 "equal", "ok")]}
+        first = sentinel.append_trajectory(findings, path=path)
+        assert first["ok"] is True
+        bad = {"control": [sentinel.Finding("control", "m", 1.0, 2.0,
+                                            "equal", "regression")]}
+        second = sentinel.append_trajectory(bad, path=path)
+        assert second["ok"] is False
+        import json
+        hist = json.load(open(path, encoding="utf-8"))
+        assert [e["ok"] for e in hist["entries"]] == [True, False]

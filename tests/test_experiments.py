@@ -428,3 +428,47 @@ class TestBenchmarkCli:
         assert run["replay_exact"] is True
         assert data["results"]["replay_poisson_small"]["experiment"] == \
             exp.to_dict()
+
+
+class TestAggregates:
+    """``aggregate_runs``: the Fig. 4 variability ladder over seed-shifted
+    repeats (and the sentinel's tolerance input)."""
+
+    def test_exact_moments_over_literal_stats(self):
+        agg = spec.aggregate_runs([{"x": 1.0, "y": 4}, {"x": 3.0, "y": 4}])
+        assert agg["x"] == {"mean": 2.0, "min": 1.0, "max": 3.0,
+                            "stdev": 1.0}
+        assert agg["y"]["stdev"] == 0.0
+
+    def test_bools_and_unshared_keys_excluded(self):
+        agg = spec.aggregate_runs([{"ok": True, "x": 1, "only_a": 2},
+                                   {"ok": False, "x": 2}])
+        assert set(agg) == {"x"}
+
+    def test_single_run_is_degenerate_but_defined(self):
+        agg = spec.aggregate_runs([{"x": 5.0}])
+        assert agg["x"] == {"mean": 5.0, "min": 5.0, "max": 5.0, "stdev": 0.0}
+        assert spec.aggregate_runs([]) == {}
+
+    def test_experiment_result_aggregates_runs(self):
+        exp = dataclasses.replace(
+            _small(spec.experiment("variability_hot_skew")), repeats=3)
+        res = exp.run()
+        agg = res.aggregates()
+        assert agg == spec.aggregate_runs([r.stats for r in res.runs])
+        for key, stats in agg.items():
+            assert stats["min"] <= stats["mean"] <= stats["max"], key
+            assert stats["stdev"] >= 0.0
+
+    def test_run_experiments_emits_aggregates(self, tmp_path):
+        from benchmarks.run import run_experiments
+
+        exp = dataclasses.replace(
+            _small(spec.experiment("variability_hot_skew")), repeats=2)
+        json_path = tmp_path / "BENCH_experiments.json"
+        run_experiments({"variability_small": exp},
+                        json_path=str(json_path))
+        data = json.loads(json_path.read_text())
+        agg = data["results"]["variability_small"]["aggregates"]
+        assert agg and all(set(v) == set(spec.AGGREGATE_STATS)
+                           for v in agg.values())

@@ -103,3 +103,39 @@ class TestObsPassivityProperties:
             trace.drive(built.executor, _workload(steps, seed, p_hot))
             outs.append(built.executor.metrics.snapshot())
         assert outs[0] == outs[1]
+
+
+class TestAnalyticsProperties:
+    """PR 8's analysis layer under the same randomized policy space: the
+    self-diff of any recorded trace is all-zero, and the critical-path
+    decomposition is a bit-exact identity on the recorded sojourns."""
+
+    @settings(max_examples=15, deadline=None)
+    @given(**POLICY, **WORKLOAD)
+    def test_self_diff_is_all_zero(self, steal_order, batch, grouped, steps,
+                                   seed, p_hot):
+        s = _spec(steal_order, batch, grouped,
+                  obs_spec=spec.ObsSpec(enabled=True))
+        built = s.build()
+        trace.drive(built.executor, _workload(steps, seed, p_hot))
+        t = built.recorder.finish()
+        d = obs.diff_traces(t, t)
+        assert d.is_zero
+        assert d.significant_shifts() == {}
+
+    @settings(max_examples=15, deadline=None)
+    @given(**POLICY, **WORKLOAD)
+    def test_critpath_sums_bit_exactly(self, steal_order, batch, grouped,
+                                       steps, seed, p_hot):
+        from repro.trace.replay import task_times
+
+        s = _spec(steal_order, batch, grouped,
+                  obs_spec=spec.ObsSpec(enabled=True))
+        built = s.build()
+        trace.drive(built.executor, _workload(steps, seed, p_hot))
+        t = built.recorder.finish()
+        rep = obs.decompose(t)
+        timings = task_times(t.submissions, t.events)
+        assert set(rep.tasks) == set(timings)
+        for uid, blame in rep.tasks.items():
+            assert blame.sojourn == timings[uid].sojourn
