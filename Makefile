@@ -3,11 +3,20 @@
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
 .PHONY: test smoke bench trace control spec experiments topology obs \
-	overhead sentinel
+	overhead sentinel check
 
 # tier-1 verify (ROADMAP.md)
 test:
 	$(PY) -m pytest -x -q
+
+# static-analysis gate (repro.check): the determinism linter over
+# src/repro/ (zero unsuppressed violations; every suppression carries a
+# reason) plus the trace model checker over every committed trace fixture.
+# Writes the JSON + markdown report to artifacts/ (CI uploads them).
+check:
+	$(PY) -m repro.check all tests/data/v1_trace_fixture.jsonl \
+		tests/data/v1_segments \
+		--json artifacts/check_report.json --md artifacts/check_report.md
 
 # tier-1 + a ~10-second online-runtime benchmark: the fast reproducibility gate
 smoke: test

@@ -161,6 +161,7 @@ def run_experiments(experiments: dict,
     """
     import json
 
+    from repro.check import check_trace
     from repro.obs import percentiles
     from repro.spec import aggregate_runs
     from repro.trace import dumps_lines, loads_lines, replay
@@ -184,6 +185,11 @@ def run_experiments(experiments: dict,
             rep = replay(loads_lines(dumps_lines(run.trace)))
             if not rep.matches_recorded:
                 diverged.append(f"{name} repeat {r}: {rep.mismatches()}")
+            # structural legality (repro.check): replay says the stats
+            # match; the model checker says the *schedule itself* was legal
+            mc = check_trace(run.trace, path=f"{name}[{r}]")
+            if not mc.ok:
+                diverged.extend(str(v) for v in mc.violations)
             s = run.stats
             steps = run.executor.step_count
             lines.append(
@@ -199,6 +205,7 @@ def run_experiments(experiments: dict,
             agg["remote"] += int(s["remote_steals"])
             runs.append({"seed": run.seed, "steps": steps,
                          "replay_exact": rep.matches_recorded,
+                         "model_check": mc.ok,   # bool: sentinel-neutral
                          "sojourn": (percentiles(run_sojourns)
                                      if run_sojourns else None), **s})
         results[name] = {"experiment": exp.to_dict(), "runs": runs,

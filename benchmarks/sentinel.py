@@ -261,6 +261,46 @@ RUNNERS = {
     "experiments": _run_experiments,
 }
 
+# traces committed to the repo: the model checker must hold on all of them
+MODEL_FIXTURES = ("tests/data/v1_trace_fixture.jsonl",
+                  "tests/data/v1_segments")
+# registry policies whose fresh probe traces the model checker re-verifies
+# every sentinel run (flat v2, hierarchical v3, obs-profiled v4 headers —
+# one per schema generation still being written)
+MODEL_POLICIES = ("replay_baseline", "topology_two_level",
+                  "topology_pods_adaptive")
+
+
+def _model_findings() -> list[Finding]:
+    """The ``model`` sentinel section: run ``repro.check``'s trace model
+    checker over every committed trace fixture plus a fresh probe trace
+    per schema-spanning registry policy.  Baseline is implicit and
+    constant — zero violations — so any structurally illegal schedule is a
+    regression (the second gate on ROADMAP item 2's hot-path rewrite,
+    independent of stats equality)."""
+    from repro.check import check_path, check_trace
+    from repro.spec import registry
+    from repro.spec.validate import probe_trace
+
+    findings: list[Finding] = []
+
+    def judge(label: str, result) -> None:
+        n = float(len(result.violations))
+        findings.append(Finding("model", f"{label}.violations", 0.0, n,
+                                "equal", "ok" if result.ok else "regression"))
+        for v in result.violations:
+            print(f"# sentinel model: {v}", file=sys.stderr)
+
+    for path in MODEL_FIXTURES:
+        if not os.path.exists(path):
+            continue
+        judge(f"fixture.{os.path.basename(path)}", check_path(path))
+    names = [n for n in MODEL_POLICIES if n in registry.policy_names()]
+    for name in names:
+        spec = registry.named(name)
+        judge(f"policy.{name}", check_trace(probe_trace(spec), path=name))
+    return findings
+
 
 def main(argv: list[str] | None = None) -> int:
     argv = sys.argv[1:] if argv is None else argv
@@ -268,10 +308,11 @@ def main(argv: list[str] | None = None) -> int:
     only = None
     if "--only" in argv:
         only = set(argv[argv.index("--only") + 1].split(","))
-        unknown = only - set(BASELINES)
+        known = set(BASELINES) | {"model"}
+        unknown = only - known
         if unknown:
             raise SystemExit(f"--only: unknown bench(es) {sorted(unknown)}; "
-                             f"choose from {sorted(BASELINES)}")
+                             f"choose from {sorted(known)}")
 
     all_findings: dict[str, list[Finding]] = {}
     skipped: dict[str, str] = {}
@@ -296,6 +337,11 @@ def main(argv: list[str] | None = None) -> int:
             if bench == "overhead":
                 base, fresh = _intersect_overhead(base, fresh)
             all_findings[bench] = compare(base, fresh, bench)
+
+    if only is None or "model" in only:
+        print("# sentinel: model-checking committed fixtures + fresh "
+              "policy probe traces", flush=True)
+        all_findings["model"] = _model_findings()
 
     report = render_report(all_findings, skipped)
     with open(REPORT_PATH, "w", encoding="utf-8") as fh:

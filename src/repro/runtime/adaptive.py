@@ -22,7 +22,6 @@ contents — they compose with any ``DomainQueues`` steal order.
 """
 from __future__ import annotations
 
-from collections import defaultdict
 from typing import Optional
 
 from .workers import Worker
@@ -101,7 +100,11 @@ class AdaptiveSteal(StealGovernor):
         self.max_threshold = max_threshold
         self._penalty = float(penalty_hint)
         self._level_penalty: dict[int, float] = {}
-        self._idle: defaultdict[int, int] = defaultdict(int)
+        # plain dict, read via .get: a defaultdict here would grow on every
+        # read (min_victim_depth inserts a zero per probed worker) and its
+        # live view leaked through accessors lets callers mutate governor
+        # state — the linter's state-view rule now guards this class of bug
+        self._idle: dict[int, int] = {}
 
     @property
     def threshold(self) -> int:
@@ -130,15 +133,21 @@ class AdaptiveSteal(StealGovernor):
         self._level_penalty.update(
             {int(lv): float(est) for lv, est in estimates.items()})
 
+    def idle_counts(self) -> dict[int, int]:
+        """Consecutive idle polls per worker id — a plain-dict snapshot
+        (mutating it never touches the governor)."""
+        return dict(self._idle)
+
     def min_victim_depth(self, worker: Worker) -> Optional[int]:
-        return max(self.threshold - self._idle[worker.wid], 1)
+        return max(self.threshold - self._idle.get(worker.wid, 0), 1)
 
     def min_victim_depth_at(self, worker: Worker,
                             level: int) -> Optional[int]:
-        return max(self.threshold_at(level) - self._idle[worker.wid], 1)
+        return max(self.threshold_at(level) - self._idle.get(worker.wid, 0),
+                   1)
 
     def on_idle(self, worker: Worker) -> None:
-        self._idle[worker.wid] += 1
+        self._idle[worker.wid] = self._idle.get(worker.wid, 0) + 1
 
     def on_execute(self, worker: Worker, stolen: bool, penalty: float,
                    cost: float = 1.0, level: int = 1) -> None:

@@ -12,7 +12,11 @@ files taken as-is) this:
   4. drives a small seeded hot-skew workload through it while recording;
   5. serializes the trace and replays it *from the embedded header spec
      alone* (``replay(trace)``, no executor argument), asserting the
-     replayed ``RuntimeStats`` are bit-identical to the recorded ones.
+     replayed ``RuntimeStats`` are bit-identical to the recorded ones;
+  6. model-checks the trace (``repro.check``): the recorded schedule must
+     be structurally legal — FIFO per domain queue, steal edges the header
+     permits, monotone steps, exact-once submit/exec — not just
+     stats-identical under replay.
 
 *Experiment* files (``repro.spec.ExperimentSpec``: a ``workload`` block
 next to the ``policy``, e.g. ``specs/experiments/*.json``) are detected by
@@ -34,17 +38,13 @@ from .experiments import ExperimentSpec
 from .model import RuntimeSpec, SpecError
 
 
-def validate_spec(spec: RuntimeSpec) -> dict[str, float]:
-    """Build + drive + record + header-only replay for one spec.
-
-    Returns the recorded stats snapshot.  Raises (``SpecError`` /
-    ``AssertionError``) on any fidelity failure.
-    """
+def probe_trace(spec: RuntimeSpec):
+    """Build ``spec``'s system, drive the standard seeded hot-skew probe
+    workload through it while recording, and return the trace after a
+    JSONL round-trip — the shared raw material for header-only replay
+    validation here and for model-checking in ``benchmarks.sentinel``."""
     from ..trace import (TraceRecorder, drive, hot_skew, loads_lines,
-                         dumps_lines, poisson, replay)
-
-    if spec.from_json(spec.to_json()) != spec:
-        raise SpecError("canonical round-trip changed the spec")
+                         dumps_lines, poisson)
 
     built = spec.build()
     ex = built.executor
@@ -56,12 +56,39 @@ def validate_spec(spec: RuntimeSpec) -> dict[str, float]:
                           num_domains=spec.num_domains, seed=spec.seed + 1),
                   hot_domain=0, p_hot=0.75, seed=spec.seed + 1)
     drive(ex, wl)
-    trace = recorder.finish()
-    trace = loads_lines(dumps_lines(trace))      # through the JSONL form
+    return loads_lines(dumps_lines(recorder.finish()))
+
+
+def model_check(trace, label: str) -> None:
+    """Run ``repro.check``'s trace model checker; raise ``SpecError`` on
+    any structural-legality violation (named rule included)."""
+    from ..check import check_trace
+
+    result = check_trace(trace, path=label)
+    if not result.ok:
+        raise SpecError(
+            "trace model checker found an illegal schedule: "
+            + "; ".join(str(v) for v in result.violations[:5]))
+
+
+def validate_spec(spec: RuntimeSpec) -> dict[str, float]:
+    """Round-trip + probe-drive + header-only replay + model check for one
+    spec.
+
+    Returns the recorded stats snapshot.  Raises (``SpecError`` /
+    ``AssertionError``) on any fidelity failure.
+    """
+    from ..trace import replay
+
+    if spec.from_json(spec.to_json()) != spec:
+        raise SpecError("canonical round-trip changed the spec")
+
+    trace = probe_trace(spec)
     if trace.meta.get("spec") is None:
         raise SpecError("built executor did not embed its spec in the "
                         "trace header")
     replay(trace, assert_match=True)             # header-only reconstruction
+    model_check(trace, "<probe>")                # structural legality
     return trace.stats
 
 
@@ -79,7 +106,7 @@ def validate_experiment(exp: ExperimentSpec) -> dict[str, float]:
     if exp.from_json(exp.to_json()) != exp:
         raise SpecError("canonical round-trip changed the experiment")
     result = exp.run()
-    for run in result.runs:
+    for r, run in enumerate(result.runs):
         trace = loads_lines(dumps_lines(run.trace))
         if trace.meta.get("spec") is None:
             raise SpecError("experiment executor did not embed its spec in "
@@ -88,6 +115,7 @@ def validate_experiment(exp: ExperimentSpec) -> dict[str, float]:
             raise SpecError("experiment executor did not embed the "
                             "experiment in the trace header")
         replay(trace, assert_match=True)         # header-only reconstruction
+        model_check(trace, f"<repeat {r}>")      # structural legality
     return result.primary.trace.stats
 
 

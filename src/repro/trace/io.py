@@ -121,6 +121,7 @@ class TraceWriter:
             if self._fh is not None:
                 self._fh.close()
             name = os.path.join(self.path, f"segment-{self._seg:05d}.jsonl")
+            # repro: allow[hook-purity] sanctioned streaming-export sink: the submit hook writes records out, it never reads anything back into a decision
             self._fh = open(name, "w", encoding="utf-8")
             self._seg += 1
             self._in_seg = 0

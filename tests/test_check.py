@@ -1,0 +1,423 @@
+"""repro.check: the determinism linter and the trace model checker.
+
+Two families of guarantees:
+
+  * the *shipped tree* gates green — zero unsuppressed lint violations,
+    every suppression reasoned, every committed trace fixture and fresh
+    registry-policy trace structurally legal;
+  * every *rule* actually fires — seeded source snippets for each lint
+    rule, seeded trace mutations (duplicate exec, illegal steal level,
+    non-monotone step, FIFO swap, stripped meta, tampered stats) for each
+    model rule, asserting the checker names the violated rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import pytest
+
+from repro import check
+from repro.check.__main__ import main as check_main
+from repro.runtime import AdaptiveSteal, Worker
+from repro.spec import ObsSpec, registry
+from repro.spec.validate import probe_trace
+from repro.trace import TraceReader, dumps_lines, loads_lines
+
+FIXTURE = "tests/data/v1_trace_fixture.jsonl"
+SEGMENTS = "tests/data/v1_segments"
+
+
+def rules_of(violations):
+    return {v.rule for v in violations if not v.suppressed}
+
+
+# ---------------------------------------------------------------------------
+# the determinism linter
+# ---------------------------------------------------------------------------
+
+class TestLintRules:
+    def test_wall_clock_module_call(self):
+        src = "import time\n\ndef f():\n    return time.time()\n"
+        assert rules_of(check.lint_source(src, "runtime/fake.py")) \
+            == {"wall-clock"}
+
+    def test_wall_clock_from_import(self):
+        src = ("from time import perf_counter_ns\n\n"
+               "def f():\n    return perf_counter_ns()\n")
+        assert rules_of(check.lint_source(src, "control/fake.py")) \
+            == {"wall-clock"}
+
+    def test_datetime_now(self):
+        src = ("import datetime\n\n"
+               "def f():\n    return datetime.datetime.now()\n")
+        assert rules_of(check.lint_source(src, "obs/fake.py")) \
+            == {"wall-clock"}
+
+    def test_stdlib_random(self):
+        src = "import random\n\ndef f(xs):\n    random.shuffle(xs)\n"
+        assert rules_of(check.lint_source(src, "runtime/fake.py")) \
+            == {"unseeded-rng"}
+
+    def test_np_random_module_function(self):
+        src = "import numpy as np\n\ndef f():\n    return np.random.rand(3)\n"
+        assert rules_of(check.lint_source(src, "trace/fake.py")) \
+            == {"unseeded-rng"}
+
+    def test_unseeded_default_rng(self):
+        src = ("import numpy as np\n\n"
+               "def f():\n    return np.random.default_rng()\n")
+        assert rules_of(check.lint_source(src, "runtime/fake.py")) \
+            == {"unseeded-rng"}
+
+    def test_seeded_default_rng_ok(self):
+        src = ("import numpy as np\n\n"
+               "def f(seed):\n"
+               "    rng = np.random.default_rng(seed)\n"
+               "    return rng.integers(0, 4)\n")
+        assert check.lint_source(src, "runtime/fake.py") == []
+
+    def test_unordered_iteration(self):
+        src = ("def f(xs):\n"
+               "    s = set(xs)\n"
+               "    for x in s:\n"
+               "        yield x\n")
+        assert rules_of(check.lint_source(src, "runtime/fake.py")) \
+            == {"unordered-iter"}
+
+    def test_sorted_set_iteration_ok(self):
+        src = ("def f(xs):\n"
+               "    for x in sorted(set(xs)):\n"
+               "        yield x\n")
+        assert check.lint_source(src, "runtime/fake.py") == []
+
+    def test_set_comprehension_iterable(self):
+        src = "def f(xs):\n    return [x for x in {1, 2, 3}]\n"
+        assert rules_of(check.lint_source(src, "control/fake.py")) \
+            == {"unordered-iter"}
+
+    def test_id_ordering(self):
+        src = "def f(task, d):\n    d[id(task)] = 1\n"
+        assert rules_of(check.lint_source(src, "runtime/fake.py")) \
+            == {"id-order"}
+
+    def test_env_read(self):
+        src = "import os\n\ndef f():\n    return os.environ['SEED']\n"
+        assert rules_of(check.lint_source(src, "runtime/fake.py")) \
+            == {"env-read"}
+
+    def test_env_read_out_of_scope_package(self):
+        # env-read is scoped to runtime/control/obs; launch code may read it
+        src = "import os\n\ndef f():\n    return os.environ['SEED']\n"
+        assert check.lint_source(src, "launch/fake.py") == []
+
+    def test_state_view(self):
+        src = ("class Gov:\n"
+               "    def __init__(self):\n"
+               "        self._idle = {}\n"
+               "    def idle(self):\n"
+               "        return self._idle\n")
+        assert rules_of(check.lint_source(src, "runtime/fake.py")) \
+            == {"state-view"}
+
+    def test_state_view_copy_ok(self):
+        src = ("class Gov:\n"
+               "    def __init__(self):\n"
+               "        self._idle = {}\n"
+               "    def idle(self):\n"
+               "        return dict(self._idle)\n")
+        assert check.lint_source(src, "runtime/fake.py") == []
+
+    def test_out_of_scope_package_is_quiet(self):
+        # models/ is the jax side: clocks and device RNG are its job
+        src = "import time\n\ndef f():\n    return time.time()\n"
+        assert check.lint_source(src, "models/fake.py") == []
+
+
+class TestSuppressions:
+    SRC = ("import time\n\ndef f():\n"
+           "    # repro: allow[wall-clock] {reason}\n"
+           "    return time.time()\n")
+
+    def test_reasoned_suppression_silences(self):
+        out = check.lint_source(
+            self.SRC.format(reason="sanctioned probe"), "runtime/fake.py")
+        assert len(out) == 1 and out[0].suppressed
+        assert out[0].reason == "sanctioned probe"
+
+    def test_bare_suppression_is_flagged(self):
+        src = ("import time\n\ndef f():\n"
+               "    # repro: allow[wall-clock]\n"
+               "    return time.time()\n")
+        rules = rules_of(check.lint_source(src, "runtime/fake.py"))
+        assert "bad-suppression" in rules
+        assert "wall-clock" in rules          # no reason -> nothing silenced
+
+    def test_unknown_rule_is_flagged(self):
+        src = "# repro: allow[not-a-rule] because reasons\nX = 1\n"
+        assert rules_of(check.lint_source(src, "runtime/fake.py")) \
+            == {"bad-suppression"}
+
+    def test_docstring_mention_is_not_a_suppression(self):
+        src = ('"""Docs: use `# repro: allow[unknown-thing]` comments."""\n'
+               "X = 1\n")
+        assert check.lint_source(src, "runtime/fake.py") == []
+
+
+class TestHookPurity:
+    IMPURE = ("import time\n\n"
+              "def hook(task, domain, step):\n"
+              "    _helper()\n\n"
+              "def _helper():\n"
+              "    time.time()\n\n"
+              "class Recorder:\n"
+              "    def attach(self, ex):\n"
+              "        ex.submit_hook = hook\n")
+
+    def test_impure_hook_flagged_transitively(self):
+        out = check.check_hook_purity({"runtime/fake.py": self.IMPURE})
+        assert rules_of(out) == {"hook-purity"}
+        (v,) = out
+        assert "wall-clock" in v.message and "submit_hook" in v.message
+        assert v.line == 7                     # the impure site, not the root
+
+    def test_pure_hook_ok(self):
+        src = ("def hook(task, domain, step):\n"
+               "    return domain\n\n"
+               "class Recorder:\n"
+               "    def attach(self, ex):\n"
+               "        ex.submit_hook = hook\n")
+        assert check.check_hook_purity({"runtime/fake.py": src}) == []
+
+    def test_governor_object_methods_are_roots(self):
+        src = ("import time\n\n"
+               "class Gov:\n"
+               "    def on_idle(self, worker):\n"
+               "        time.time()\n\n"
+               "def build(ex):\n"
+               "    ex.governor = Gov()\n")
+        out = check.check_hook_purity({"runtime/fake.py": src})
+        assert rules_of(out) == {"hook-purity"}
+
+    def test_suppression_applies_at_impure_site(self):
+        src = self.IMPURE.replace(
+            "    time.time()",
+            "    # repro: allow[hook-purity] sanctioned in this test\n"
+            "    time.time()")
+        out = check.check_hook_purity({"runtime/fake.py": src})
+        assert all(v.suppressed for v in out)
+
+
+class TestShippedTree:
+    def test_tree_lints_clean(self):
+        active = [v for v in check.lint_tree() if not v.suppressed]
+        assert active == [], "\n".join(str(v) for v in active)
+
+    def test_every_suppression_carries_a_reason(self):
+        for v in check.lint_tree():
+            if v.suppressed:
+                assert v.reason, f"reasonless suppression: {v}"
+
+    def test_cli_gate_passes_on_tree(self, capsys):
+        assert check_main(["--quiet"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# the trace model checker
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fixture_trace():
+    return TraceReader(FIXTURE).read()
+
+
+class TestModelFixtures:
+    def test_v1_fixture_is_legal(self):
+        result = check.check_path(FIXTURE)
+        assert result.ok, result.violations
+
+    def test_v1_segments_are_legal(self):
+        result = check.check_path(SEGMENTS)
+        assert result.ok, result.violations
+
+    @pytest.mark.parametrize("policy", ["replay_baseline",
+                                        "topology_two_level",
+                                        "topology_pods_adaptive"])
+    def test_fresh_registry_policy_traces_are_legal(self, policy):
+        trace = probe_trace(registry.named(policy))
+        result = check.check_trace(trace, path=policy)
+        assert result.ok, result.violations
+
+    def test_fresh_v4_obs_trace_is_legal(self):
+        spec = dataclasses.replace(registry.named("replay_baseline"),
+                                   obs=ObsSpec(enabled=True))
+        trace = probe_trace(spec)
+        assert trace.obs_dict is not None      # schema v4 header
+        result = check.check_trace(trace, path="obs_enabled")
+        assert result.ok, result.violations
+
+
+def mutate(trace, *, events=None, meta=None, stats=None, submissions=None):
+    """A shallow variant of ``trace`` with the given parts replaced."""
+    return dataclasses.replace(
+        trace,
+        meta=dict(trace.meta) if meta is None else meta,
+        submissions=list(trace.submissions) if submissions is None
+        else submissions,
+        events=list(trace.events) if events is None else events,
+        stats=dict(trace.stats) if stats is None else stats)
+
+
+class TestModelMutations:
+    def exec_index(self, trace, stolen=False):
+        from repro.trace import event_stolen
+        for i, e in enumerate(trace.events):
+            if e.kind in ("run", "steal", "inline") and e.task_uid >= 0:
+                if not stolen or event_stolen(e):
+                    return i
+        pytest.skip("fixture lacks the needed event shape")
+
+    def test_duplicate_exec_names_exec_unique(self, fixture_trace):
+        i = self.exec_index(fixture_trace)
+        events = list(fixture_trace.events)
+        events.append(events[i])
+        bad = mutate(fixture_trace, events=events)
+        assert "exec-unique" in rules_of(
+            check.check_trace(bad).violations)
+
+    def test_illegal_steal_domain_names_steal_level(self, fixture_trace):
+        i = self.exec_index(fixture_trace, stolen=True)
+        events = list(fixture_trace.events)
+        events[i] = dataclasses.replace(events[i], src_domain=99)
+        bad = mutate(fixture_trace, events=events)
+        assert "steal-level" in rules_of(check.check_trace(bad).violations)
+
+    def test_steal_under_nosteal_names_steal_level(self, fixture_trace):
+        self.exec_index(fixture_trace, stolen=True)   # needs >=1 steal
+        meta = dict(fixture_trace.meta)
+        meta["governor"] = "NoSteal"
+        bad = mutate(fixture_trace, meta=meta)
+        assert "steal-level" in rules_of(check.check_trace(bad).violations)
+
+    def test_non_monotone_step_names_step_monotone(self, fixture_trace):
+        events = list(fixture_trace.events)
+        events[-1] = dataclasses.replace(events[-1], step=0)
+        bad = mutate(fixture_trace, events=events)
+        assert "step-monotone" in rules_of(
+            check.check_trace(bad).violations)
+
+    def test_fifo_swap_names_fifo_order(self, fixture_trace):
+        # swap the uids of two executions served from the same queue
+        events = list(fixture_trace.events)
+        by_src = {}
+        pair = None
+        for i, e in enumerate(events):
+            if e.kind in ("run", "steal", "inline") and e.task_uid >= 0:
+                src = e.src_domain if e.src_domain >= 0 else e.domain
+                if src in by_src:
+                    pair = (by_src[src], i)
+                    break
+                by_src[src] = i
+        assert pair is not None
+        a, b = pair
+        events[a], events[b] = (
+            dataclasses.replace(events[a], task_uid=events[b].task_uid),
+            dataclasses.replace(events[b], task_uid=events[a].task_uid))
+        bad = mutate(fixture_trace, events=events)
+        assert "fifo-order" in rules_of(check.check_trace(bad).violations)
+
+    def test_missing_meta_key_names_fidelity_keys(self, fixture_trace):
+        meta = dict(fixture_trace.meta)
+        del meta["seed"]
+        bad = mutate(fixture_trace, meta=meta)
+        assert "fidelity-keys" in rules_of(
+            check.check_trace(bad).violations)
+
+    def test_tampered_stats_names_stats_consistency(self, fixture_trace):
+        stats = dict(fixture_trace.stats)
+        stats["executed"] = stats["executed"] + 1
+        bad = mutate(fixture_trace, stats=stats)
+        assert "stats-consistency" in rules_of(
+            check.check_trace(bad).violations)
+
+    def test_duplicate_submission_names_submit_unique(self, fixture_trace):
+        subs = list(fixture_trace.submissions)
+        subs.append(subs[0])
+        bad = mutate(fixture_trace, submissions=subs)
+        assert "submit-unique" in rules_of(
+            check.check_trace(bad).violations)
+
+    def test_windowed_trace_skips_stream_checks(self, fixture_trace):
+        # claim the ring buffer dropped events: occupancy checks must skip
+        # (recorded as notes), not fire false violations
+        counts = dict(fixture_trace.event_counts)
+        first = next(iter(counts))
+        counts[first] = counts[first] + 5
+        bad = dataclasses.replace(mutate(fixture_trace),
+                                  event_counts=counts)
+        result = check.check_trace(bad)
+        assert "fifo-order" not in rules_of(result.violations)
+        assert any("skipped" in n for n in result.notes)
+
+
+class TestModelCli:
+    def test_cli_exits_nonzero_and_names_rule(self, tmp_path, capsys,
+                                              fixture_trace):
+        events = list(fixture_trace.events)
+        i = next(i for i, e in enumerate(events)
+                 if e.kind in ("run", "steal", "inline"))
+        events.append(events[i])               # duplicate execution
+        bad = mutate(fixture_trace, events=events)
+        path = tmp_path / "bad.jsonl"
+        path.write_text("\n".join(dumps_lines(bad)) + "\n")
+        report = tmp_path / "report.json"
+        rc = check_main(["model", str(path), "--json", str(report),
+                         "--quiet"])
+        assert rc == 1
+        data = json.loads(report.read_text())
+        rules = {v["rule"] for m in data["model"] for v in m["violations"]}
+        assert "exec-unique" in rules
+
+    def test_cli_unreadable_trace_fails_closed(self, tmp_path):
+        missing = tmp_path / "nope.jsonl"
+        assert check_main(["model", str(missing), "--quiet"]) == 1
+
+    def test_cli_all_mode_over_fixtures(self, capsys):
+        assert check_main(["all", FIXTURE, SEGMENTS, "--quiet"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: AdaptiveSteal state hygiene
+# ---------------------------------------------------------------------------
+
+class TestAdaptiveStateHygiene:
+    def test_depth_reads_do_not_grow_idle_state(self):
+        gov = AdaptiveSteal()
+        w = Worker(wid=3, domain=0)
+        gov.min_victim_depth(w)
+        gov.min_victim_depth_at(w, level=1)
+        assert gov.idle_counts() == {}         # probes left no residue
+
+    def test_idle_counts_is_a_snapshot(self):
+        gov = AdaptiveSteal()
+        w = Worker(wid=1, domain=0)
+        gov.on_idle(w)
+        snap = gov.idle_counts()
+        snap[1] = 99
+        snap[7] = 5
+        assert gov.idle_counts() == {1: 1}
+
+    def test_level_penalty_estimates_is_a_snapshot(self):
+        gov = AdaptiveSteal()
+        w = Worker(wid=0, domain=0)
+        gov.on_execute(w, stolen=True, penalty=8.0, level=2)
+        snap = gov.level_penalty_estimates()
+        snap[2] = -1.0
+        assert gov.level_penalty_estimates()[2] == 8.0
+
+    def test_idle_decay_still_reaches_floor(self):
+        gov = AdaptiveSteal(penalty_hint=16.0)
+        w = Worker(wid=0, domain=0)
+        for _ in range(64):
+            gov.on_idle(w)
+        assert gov.min_victim_depth(w) == 1    # starved worker still steals
