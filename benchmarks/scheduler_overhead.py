@@ -25,20 +25,22 @@ time delta must stay inside noise.  Gates (skipped under ``gates=False``):
     during timed regions, so collector pauses and scheduler jitter do
     not fail the gate).
 
-The wall-time gate binds at *every* scale.  A single sub-0.1s run is
-noisier than the few-percent delta the gate watches, so short
-configurations don't get exempted — they get more repeats: each A/B arm
-is re-run until it has accumulated at least ``REPEAT_WALL_FLOOR_S`` of
-measured wall time (capped at ``MAX_REPEATS``), and the gated
-``overhead_frac`` picks the estimator that is tight at that scale.
-Long rows (single run ≥ ``MIN_WALL_FOR_MIN_S``) gate on the min-of-N
-ratio — the classic noise-floor estimator, robust to background spikes
-landing in one arm of an 8-second run.  Short rows gate on the
-*accumulated*-wall ratio over all repeats — CLT averaging over ~50
-paired rounds, empirically ±1–2% at the 10³-task scale where min-of-N
-still jitters ±5%.  The JSON records ``repeats_used`` and the
-``estimator`` chosen per row; ``wall_off_s``/``wall_on_s``/
-``tasks_per_s`` always report the min-of-N floors.
+The wall-time gate binds at *every* scale.  A single short run is noisier
+than the few-percent delta the gate watches, so short configurations
+don't get exempted — they get more repeats: rounds continue until each
+arm has accumulated at least ``REPEAT_WALL_FLOOR_S`` of measured wall
+time (capped at ``MAX_REPEATS``).  Each round runs both arms
+back-to-back, with the arm *order alternating* round to round: a fixed
+off-then-on order lets slow machine drift (thermal, allocator state)
+masquerade as a one-sided obs cost — measured on a shared box, a fixed
+order read a reproducible +11% on two provably identical arms (cProfile:
+same call counts to the function), while off-vs-off read 0%.  The gated
+``overhead_frac`` is the **median of per-round on/off ratios**: pairing
+cancels drift, alternation cancels order bias, and the median shrugs off
+background spikes landing in either arm of any single round (per-round
+ratios jitter ±20% where the median holds within ±3%).  The JSON records
+``repeats_used`` and the ``estimator`` name per row; ``wall_off_s``/
+``wall_on_s``/``tasks_per_s`` always report the min-of-N floors.
 
 The profiled arm is reported but not gated: the timers themselves cost a
 few hundred ns per decision and that cost is exactly what this benchmark
@@ -47,6 +49,17 @@ exists to measure, not to hide.
 The driven workload is synthetic and arrival-paced (``num_domains`` tasks
 per scheduling round, 20% of them homed hot on domain 0 so the steal scan
 has real work), under a fixed batch-4 grab so all four hot paths fire.
+
+Fast vs slow (``fast_vs_slow`` in the JSON): the runtime keeps the
+pre-rewrite O(domains) victim scan and object-per-event log alive as a
+reference implementation (``Executor(fast=False)``).  For each configured
+scale this block drives the identical workload through both arms,
+**requires** bit-identical results — same ``RuntimeStats`` snapshot, same
+whole-run event counts, and byte-identical event-window CSV — and reports
+each arm's ns/decision plus the fast/slow speedup per hot path
+(``speedup_*``; the committed artifact is where the ≥2x steal_scan /
+event_append acceptance number lives, and ``FVS_SPEEDUP_FLOOR`` guards
+against the fast path silently regressing toward the slow one).
 
 CSV: n_tasks,num_domains,submit_route_ns,steal_scan_ns,batch_grab_ns,
 event_append_ns,wall_off_s,wall_on_s,overhead_frac,tasks_per_s
@@ -61,21 +74,30 @@ from __future__ import annotations
 
 import gc
 import json
+import statistics
 import sys
 import time
 import warnings
 
-TASK_SCALES = (1_000, 10_000, 100_000)
+TASK_SCALES = (1_000, 10_000, 100_000, 1_000_000)
 DOMAIN_SCALES = (4, 16)
 FAST_TASK_SCALES = (1_000, 20_000)
 FAST_DOMAIN_SCALES = (4,)
 OVERHEAD_GATE = 0.05           # obs-on may cost at most 5% throughput
 REPEAT_WALL_FLOOR_S = 1.0      # accumulated per-arm wall before gating
 MAX_REPEATS = 256              # adaptive-repeat ceiling per arm
-MIN_WALL_FOR_MIN_S = 0.1       # runs this long gate on the min-of-N ratio
+MILLION_REPEATS = 2            # repeat floor for the 10^6-task rows
 BATCH_SIZE = 4                 # fixed batch so batch_grab fires
 STEAL_PENALTY = 4.0
 HOT_EVERY = 5                  # every 5th task homed on domain 0
+DEPTH_STRIDE_HUGE = 64         # depth-sample stride for the 10^6-task rows
+
+# fast-vs-slow equivalence + speedup scales, (n_tasks, num_domains)
+FVS_SCALES = ((100_000, 4), (100_000, 16))
+FAST_FVS_SCALES = ((20_000, 4),)
+FVS_SPEEDUP_FLOOR = 1.5        # fast arm must beat slow by at least this
+FVS_GATED_PATHS = ("steal_scan", "event_append")
+FVS_GATE_MIN_TASKS = 100_000   # speedup floor binds at this scale and up
 
 
 def _spec(num_domains: int, *, obs_enabled: bool, profile: bool):
@@ -90,12 +112,20 @@ def _spec(num_domains: int, *, obs_enabled: bool, profile: bool):
     )
 
 
-def _drive(built, n_tasks: int, num_domains: int) -> float:
+def _drive(ex, n_tasks: int, num_domains: int, *,
+           contended: bool = False) -> float:
     """Submit ``num_domains`` tasks per scheduling round (20% homed hot on
     domain 0), step between waves, drain; returns elapsed wall seconds.
-    The big scales overflow the event ring buffer by design — the one-shot
-    warning is expected and muted here (storm analysis is not run)."""
-    ex = built.executor
+    Takes a bare ``Executor`` (spec callers pass ``built.executor``).  The
+    big scales overflow the event ring buffer by design — the one-shot
+    warning is expected and muted here (storm analysis is not run).
+
+    ``contended=True`` homes *every* task on domain 0: all other workers'
+    local queues stay dry, so each of their grabs runs the victim-selection
+    scan or the machine-wide-empty poll — the code the fast eligibility
+    structures replace.  The default mix is local-pop dominated (every
+    timed dequeue is a successful pop) and measures the other half of the
+    hot path."""
     # GC hygiene: a collection pause landing inside one arm but not the
     # other would swamp the few-percent delta the gate watches.  The driven
     # structures are cycle-free (refcounting reclaims them), so the cyclic
@@ -107,7 +137,8 @@ def _drive(built, n_tasks: int, num_domains: int) -> float:
             warnings.simplefilter("ignore", RuntimeWarning)
             t0 = time.perf_counter()
             for i in range(n_tasks):
-                home = 0 if i % HOT_EVERY == 0 else i % num_domains
+                home = (0 if contended or i % HOT_EVERY == 0
+                        else i % num_domains)
                 ex.submit(ex.make_task(home=home))
                 if i % num_domains == num_domains - 1:
                     ex.step()
@@ -124,37 +155,40 @@ def measure(n_tasks: int, num_domains: int,
     ``repeats`` is the floor; short configurations repeat adaptively
     until each arm accumulates ``REPEAT_WALL_FLOOR_S`` of wall time
     (capped at ``MAX_REPEATS``) so every row participates in the overhead
-    gate.  The gated fraction is min-of-N for long runs, accumulated-wall
-    for short ones; the reported ``wall_*``/``tasks_per_s`` stay min-of-N
-    floors.
+    gate.  The gated fraction is the median of per-round paired ratios
+    under alternating arm order (see module doc); the reported
+    ``wall_*``/``tasks_per_s`` stay min-of-N floors.
     """
     # profiled arm: ns/decision per hot path (one run; the counters are
     # totals over millions of calls, repeat noise is already averaged out)
     built_prof = _spec(num_domains, obs_enabled=True, profile=True).build()
-    _drive(built_prof, n_tasks, num_domains)
+    _drive(built_prof.executor, n_tasks, num_domains)
     prof = built_prof.obs.profiler.snapshot()
     stats_prof = built_prof.executor.metrics.snapshot()
 
-    # A/B arms: min-of-repeats wall time, identical seeds and workload;
-    # keep pairing (off then on) each round so slow drift in machine load
-    # hits both arms alike
     wall_off = wall_on = float("inf")
     acc_off = acc_on = 0.0
-    stats_off = stats_on = None
+    ratios = []
+    stats = {True: None, False: None}
     repeats_used = 0
     while repeats_used < repeats or (
             min(acc_off, acc_on) < REPEAT_WALL_FLOOR_S
             and repeats_used < MAX_REPEATS):
-        b_off = _spec(num_domains, obs_enabled=False, profile=False).build()
-        w = _drive(b_off, n_tasks, num_domains)
-        wall_off, acc_off = min(wall_off, w), acc_off + w
-        stats_off = b_off.executor.metrics.snapshot()
-        b_on = _spec(num_domains, obs_enabled=True, profile=False).build()
-        w = _drive(b_on, n_tasks, num_domains)
-        wall_on, acc_on = min(wall_on, w), acc_on + w
-        stats_on = b_on.executor.metrics.snapshot()
+        # alternate which arm runs first (round parity — deterministic)
+        arms = (False, True) if repeats_used % 2 == 0 else (True, False)
+        walls = {}
+        for on in arms:
+            built = _spec(num_domains, obs_enabled=on, profile=False).build()
+            walls[on] = _drive(built.executor, n_tasks, num_domains)
+            stats[on] = built.executor.metrics.snapshot()
+        wall_off = min(wall_off, walls[False])
+        wall_on = min(wall_on, walls[True])
+        acc_off += walls[False]
+        acc_on += walls[True]
+        ratios.append(walls[True] / walls[False])
         repeats_used += 1
 
+    stats_off, stats_on = stats[False], stats[True]
     if stats_on != stats_off or stats_prof != stats_off:
         raise SystemExit(
             f"obs perturbed the schedule at n_tasks={n_tasks}, "
@@ -168,21 +202,101 @@ def measure(n_tasks: int, num_domains: int,
         "profile_total_ns": sum(prof["ns"].values()),
         "wall_off_s": wall_off,
         "wall_on_s": wall_on,
-        "overhead_frac": (wall_on / wall_off - 1.0
-                          if wall_off >= MIN_WALL_FOR_MIN_S
-                          else acc_on / acc_off - 1.0),
+        "overhead_frac": statistics.median(ratios) - 1.0,
         "tasks_per_s": n_tasks / wall_off,
         "stats_identical": True,
         "repeats_used": repeats_used,
-        "estimator": ("min_of_n" if wall_off >= MIN_WALL_FOR_MIN_S
-                      else "accumulated"),
+        "estimator": "paired_median",
         "gated": True,
     }
 
 
+def _fvs_executor(num_domains: int, *, fast: bool):
+    from repro.obs import HotPathProfiler
+    from repro.runtime import Executor
+
+    prof = HotPathProfiler()
+    ex = Executor(num_domains,
+                  steal_order="cyclic",
+                  steal_penalty=lambda t, w: STEAL_PENALTY,
+                  batch=BATCH_SIZE,
+                  profiler=prof,
+                  fast=fast,
+                  depth_sample_stride=DEPTH_STRIDE_HUGE)
+    return ex, prof
+
+
+def measure_fast_vs_slow(n_tasks: int, num_domains: int, *,
+                         gates: bool = True) -> tuple[dict, list[str]]:
+    """Fast-path vs reference-path A/B at one scale: equivalence + speedup.
+
+    Drives the identical *contended* workload (every task homed on domain
+    0 — see ``_drive``) through ``Executor(fast=True)`` and
+    ``Executor(fast=False)`` (the pre-rewrite O(domains) victim scan and
+    object-per-event ``ReferenceEventLog``), both profiled.  Contention
+    makes every non-hot worker's grab a victim scan or an empty poll —
+    the code the rewrite replaces — while the main ladder's mixed drive
+    covers the local-pop path.  Equivalence is
+    **mandatory** regardless of ``gates`` — identical ``RuntimeStats``,
+    identical whole-run event counts, and byte-identical retained-window
+    event CSV — because bit-identity is the fast path's contract, not a
+    performance target.  The speedup floor (``FVS_SPEEDUP_FLOOR`` on
+    ``FVS_GATED_PATHS`` at >= ``FVS_GATE_MIN_TASKS`` tasks) is soft
+    anti-regression insurance; the headline ≥2x acceptance numbers live in
+    the committed full-ladder artifact.
+    """
+    snaps = {}
+    for fast in (True, False):
+        ex, prof = _fvs_executor(num_domains, fast=fast)
+        _drive(ex, n_tasks, num_domains, contended=True)
+        snaps[fast] = {
+            "stats": ex.metrics.snapshot(),
+            "counts": ex.events.counts(),
+            "csv": tuple(ex.events.to_csv_lines()),
+            "events_retained": len(ex.events),
+            "events_total": ex.events.total,
+            "prof": prof.snapshot(),
+        }
+    f, s = snaps[True], snaps[False]
+    for key, label in (("stats", "RuntimeStats"),
+                       ("counts", "event counts"),
+                       ("csv", "event CSV")):
+        if f[key] != s[key]:
+            raise SystemExit(
+                f"fast/slow divergence at n_tasks={n_tasks}, "
+                f"num_domains={num_domains}: {label} differ — "
+                f"fast={f[key]!r:.200} slow={s[key]!r:.200}")
+    ns_f, ns_s = f["prof"]["ns_per_call"], s["prof"]["ns_per_call"]
+    row = {
+        "n_tasks": n_tasks,
+        "num_domains": num_domains,
+        "ns_per_decision": {
+            **{f"{p}_fast": ns_f[p] for p in sorted(ns_f)},
+            **{f"{p}_slow": ns_s[p] for p in sorted(ns_s)},
+        },
+        "stats_identical": True,
+        "events_identical": True,
+        "events_compared": f["events_retained"],
+        "events_total": f["events_total"],
+    }
+    failures = []
+    for p in sorted(ns_f):
+        if ns_f[p] > 0:
+            speedup = ns_s[p] / ns_f[p]
+            row[f"speedup_{p}"] = speedup
+            if (gates and n_tasks >= FVS_GATE_MIN_TASKS
+                    and p in FVS_GATED_PATHS
+                    and speedup < FVS_SPEEDUP_FLOOR):
+                failures.append(
+                    f"n_tasks={n_tasks} num_domains={num_domains}: "
+                    f"{p} fast/slow speedup {speedup:.2f}x "
+                    f"< floor {FVS_SPEEDUP_FLOOR}x")
+    return row, failures
+
+
 def main(task_scales=TASK_SCALES, domain_scales=DOMAIN_SCALES,
          repeats: int = 5, json_path: str | None = None,
-         gates: bool = True) -> list[str]:
+         gates: bool = True, fvs_scales=FVS_SCALES) -> list[str]:
     lines = ["n_tasks,num_domains,submit_route_ns,steal_scan_ns,"
              "batch_grab_ns,event_append_ns,wall_off_s,wall_on_s,"
              "overhead_frac,tasks_per_s"]
@@ -190,7 +304,11 @@ def main(task_scales=TASK_SCALES, domain_scales=DOMAIN_SCALES,
     failures = []
     for num_domains in domain_scales:
         for n_tasks in task_scales:
-            row = measure(n_tasks, num_domains, repeats=repeats)
+            # the 10^6-task rows run multi-second walls per arm; the
+            # min-of-N estimator is already tight there, so cap repeats
+            row = measure(n_tasks, num_domains,
+                          repeats=(min(repeats, MILLION_REPEATS)
+                                   if n_tasks >= 1_000_000 else repeats))
             rows.append(row)
             ns = row["ns_per_decision"]
             lines.append(
@@ -204,12 +322,23 @@ def main(task_scales=TASK_SCALES, domain_scales=DOMAIN_SCALES,
                     f"n_tasks={n_tasks} num_domains={num_domains}: obs-on "
                     f"cost {row['overhead_frac']:+.1%} wall time "
                     f"(gate < {OVERHEAD_GATE:.0%})")
+    fvs_rows = []
+    for n_tasks, num_domains in fvs_scales:
+        row, fvs_fails = measure_fast_vs_slow(n_tasks, num_domains,
+                                              gates=gates)
+        fvs_rows.append(row)
+        failures.extend(fvs_fails)
+        lines.append(
+            f"# fast_vs_slow n_tasks={n_tasks} num_domains={num_domains}: "
+            + " ".join(f"{p}={row.get(f'speedup_{p}', 0.0):.2f}x"
+                       for p in FVS_GATED_PATHS))
     if json_path:
         with open(json_path, "w", encoding="utf-8") as fh:
             json.dump({"bench": "scheduler_overhead",
                        "overhead_gate": OVERHEAD_GATE,
                        "batch_size": BATCH_SIZE, "repeats": repeats,
-                       "results": rows}, fh, indent=2)
+                       "results": rows, "fast_vs_slow": fvs_rows},
+                      fh, indent=2)
             fh.write("\n")
     if failures:
         raise SystemExit("scheduler_overhead gate failure:\n  "
@@ -221,6 +350,7 @@ if __name__ == "__main__":
     fast = "--fast" in sys.argv
     out = main(task_scales=FAST_TASK_SCALES if fast else TASK_SCALES,
                domain_scales=FAST_DOMAIN_SCALES if fast else DOMAIN_SCALES,
+               fvs_scales=FAST_FVS_SCALES if fast else FVS_SCALES,
                json_path="BENCH_overhead.json")
     for ln in out:
         print(ln)

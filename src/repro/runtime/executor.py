@@ -22,7 +22,7 @@ from typing import Any, Callable, Optional, Sequence
 import numpy as np
 
 from .adaptive import GreedySteal, StealGovernor
-from .events import EventLog
+from .events import EventLog, ReferenceEventLog
 from .metrics import MetricsRecorder
 from .queues import DomainQueues
 from .workers import Worker, WorkerPool
@@ -127,6 +127,22 @@ class Executor:
                         a decision), so profiled runs keep bit-identical
                         ``RuntimeStats`` and replays; with the default
                         ``None`` the timers are skipped entirely.
+    fast:               selects the hot-path implementation.  ``True`` (the
+                        default) uses the incremental eligibility structures
+                        in ``DomainQueues`` and the columnar ``EventLog``;
+                        ``False`` runs the pre-rewrite reference scan and
+                        the object-per-event ``ReferenceEventLog``.  The two
+                        are bit-identical (same stats, same event sequence,
+                        same RNG draws) — the slow arm exists as the
+                        executable specification for the
+                        ``benchmarks.scheduler_overhead`` fast_vs_slow
+                        equivalence gate.
+    depth_sample_stride: record the per-domain queue-depth sample every
+                        N-th scheduling round (default 1 = every round, the
+                        original behaviour).  Depth sampling is O(domains)
+                        per round; million-task benchmark drives raise the
+                        stride to keep it off the hot path.  Counters in
+                        ``RuntimeStats`` are unaffected.
     """
 
     def __init__(self, num_domains: int,
@@ -145,13 +161,22 @@ class Executor:
                  batch_handler: BatchHandler | None = None,
                  step_hook: StepHook | None = None,
                  topology: Any = None,
-                 profiler: Any = None):
+                 profiler: Any = None,
+                 fast: bool = True,
+                 depth_sample_stride: int = 1):
         self.num_domains = num_domains
         self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.topology = topology
+        self.fast = fast
+        # hoisted out of the per-dequeue steal_scan region: tier count when
+        # hierarchical (per-level governor thresholds apply), else 0
+        self._hier_levels = (topology.num_levels
+                            if topology is not None and topology.hierarchical
+                            else 0)
         self.queues = DomainQueues(num_domains, steal_order=steal_order,
-                                   rng=self.rng, topology=topology)
+                                   rng=self.rng, topology=topology,
+                                   fast=fast)
         if worker_domains is None:
             worker_domains = list(range(num_domains))
         self.pool = WorkerPool(worker_domains)
@@ -162,8 +187,9 @@ class Executor:
         self.pool_cap = pool_cap
         self.governor = governor or GreedySteal()
         self.steal_penalty = steal_penalty
-        self.metrics = MetricsRecorder()
-        self.events = EventLog(event_maxlen) if record_events else None
+        self.metrics = MetricsRecorder(depth_stride=depth_sample_stride)
+        log_cls = EventLog if fast else ReferenceEventLog
+        self.events = log_cls(event_maxlen) if record_events else None
         self.submit_hook = submit_hook
         self.router = router
         self.batch = batch
@@ -180,6 +206,26 @@ class Executor:
         self._uids = itertools.count()
         self._rr = 0
         self._step = 0
+        # bound-method alias: ``queues`` is created here and never swapped,
+        # so the per-dequeue attribute walk can be paid once
+        self._dequeue = self.queues.dequeue
+
+    @property
+    def governor(self):
+        return self._governor
+
+    @governor.setter
+    def governor(self, gov) -> None:
+        # governors are swappable mid-run (the control loop attaches its
+        # breaker this way), so the hot-path shortcut below is recomputed on
+        # every assignment: a governor that inherits the base
+        # ``min_victim_depth`` unchanged is the pure constant-1 probe
+        # (GreedySteal), and ``_attempt`` may skip the Python call per
+        # dequeue without observable difference — the base probe reads no
+        # state and mutates none
+        self._governor = gov
+        self._greedy_probe = (type(gov).min_victim_depth
+                              is StealGovernor.min_victim_depth)
 
     # -- submission side ----------------------------------------------------
     def make_task(self, payload: Any = None, home: int = -1,
@@ -247,7 +293,8 @@ class Executor:
         operation."""
         self._step += 1
         n = sum(self._attempt(w) for w in self.pool)
-        self.metrics.sample_depths(self._step, self.queues.queue_sizes())
+        if self.metrics.wants_depths(self._step):
+            self.metrics.sample_depths(self._step, self.queues.queue_sizes())
         if self.step_hook is not None:
             self.step_hook(self)
         return n
@@ -294,28 +341,31 @@ class Executor:
         # repro: allow[wall-clock] sanctioned profiler site (steal_scan): timer around the dequeue, never an input to it
         t0 = perf_counter_ns() if self.profiler is not None else 0
         if inline:
-            got = self.queues.dequeue(worker.domain)
+            got = self._dequeue(worker.domain)
+        elif self._greedy_probe and not self._hier_levels:
+            # base-contract governor (GreedySteal): the probe is the pure
+            # constant 1, so skip the per-dequeue Python call entirely
+            got = self._dequeue(worker.domain, True, 1)
         else:
-            mv = self.governor.min_victim_depth(worker)
+            mv = self._governor.min_victim_depth(worker)
             if mv is None:
-                got = self.queues.dequeue(worker.domain, allow_steal=False)
+                got = self._dequeue(worker.domain, False)
             else:
-                topo = self.topology
-                if topo is not None and topo.hierarchical:
+                if self._hier_levels:
                     # per-level thresholds: the governor prices each tier
                     # separately (AdaptiveSteal's per-level θ, the breaker's
                     # remote cut); a scalar-only governor repeats its one
                     # threshold at every tier via the base contract.
-                    mv = [self.governor.min_victim_depth_at(worker, lv)
-                          for lv in range(1, topo.num_levels + 1)]
-                got = self.queues.dequeue(worker.domain, min_victim=mv)
+                    mv = [self._governor.min_victim_depth_at(worker, lv)
+                          for lv in range(1, self._hier_levels + 1)]
+                got = self._dequeue(worker.domain, True, mv)
         if self.profiler is not None:
             # repro: allow[wall-clock] sanctioned profiler site (steal_scan): elapsed-time read feeds only HotPathProfiler
             self.profiler.add("steal_scan", perf_counter_ns() - t0)
         if got is None:
             worker.stats.idle_polls += 1
             self.metrics.on_idle()
-            self.governor.on_idle(worker)
+            self._governor.on_idle(worker)
             self._emit("idle", worker=worker.wid, domain=worker.domain,
                        task_uid=-1)
             return 0
@@ -355,7 +405,7 @@ class Executor:
             worker.stats.stolen += int(stolen)
             self.metrics.on_execute(local, stolen, penalty, inline,
                                     remote=remote)
-            self.governor.on_execute(worker, stolen, penalty, task.cost,
+            self._governor.on_execute(worker, stolen, penalty, task.cost,
                                      level=got.level)
             self._emit(kind, worker=worker.wid, domain=worker.domain,
                        task_uid=task.uid, src_domain=got.domain,

@@ -56,8 +56,8 @@ from .record import TraceRecorder, executor_meta
 from .replay import (ReplayComparison, ReplayResult, TaskTiming,
                      compare_replays, executor_from_meta, executor_from_spec,
                      replay, task_times)
-from .schema import (SCHEMA_VERSION, SubmissionRecord, Trace,
-                     TraceSchemaError, event_stolen)
+from .schema import (SCHEMA_VERSION, ColumnarEvents, SubmissionRecord,
+                     Trace, TraceSchemaError, event_stolen)
 from .storms import (DroppedEventsError, Window, depth_imbalance,
                      detect_inline_bursts, detect_remote_storms,
                      detect_steal_storms, render_timeline, windows)
@@ -71,8 +71,8 @@ __all__ = [
     "TraceRecorder", "executor_meta",
     "ReplayComparison", "ReplayResult", "TaskTiming", "compare_replays",
     "executor_from_meta", "executor_from_spec", "replay", "task_times",
-    "SCHEMA_VERSION", "SubmissionRecord", "Trace", "TraceSchemaError",
-    "event_stolen",
+    "SCHEMA_VERSION", "ColumnarEvents", "SubmissionRecord", "Trace",
+    "TraceSchemaError", "event_stolen",
     "DroppedEventsError", "Window", "depth_imbalance", "detect_inline_bursts",
     "detect_remote_storms", "detect_steal_storms", "render_timeline",
     "windows",

@@ -19,6 +19,15 @@ runs instead of pausing for one big ``finish()`` dump.  ``TraceReader``
 reads a segment directory transparently: point it at the directory and it
 concatenates ``*.jsonl`` segments in name order.
 
+Columnar events (schema v5): pass ``columnar_events=N`` and events are
+written as ``events`` chunk records of up to N events each (parallel column
+lists) instead of one record per event — a million-event trace shrinks to
+a few hundred lines and parses lazily (``schema.ColumnarEvents``).  In
+streaming mode chunking buffers up to N events in memory and flushes a
+chunk line at each boundary (and at ``end``), trading the per-record
+on-disk-live guarantee for compactness; per-event mode (the default) keeps
+the original record-per-line durability.
+
 ``dumps_lines``/``loads_lines`` expose the same round-trip on in-memory line
 lists (no filesystem), which tests and the serving engine's trace hook use.
 """
@@ -31,16 +40,37 @@ from typing import Any, Iterable, Iterator, Optional, TextIO
 
 from ..runtime import Event
 from .schema import (SubmissionRecord, Trace, TraceSchemaError, event_dict,
-                     footer_dict, header_dict, parse_records, submission_dict)
+                     events_chunk_dict, footer_dict, header_dict,
+                     parse_records, submission_dict)
 
 SEGMENT_PATTERN = "segment-*.jsonl"
 
 
-def dumps_lines(trace: Trace) -> list[str]:
-    """Serialize ``trace`` to JSONL lines (no trailing newlines)."""
+def _event_chunks(events, size: int) -> Iterator[list[Event]]:
+    chunk: list[Event] = []
+    for e in events:
+        chunk.append(e)
+        if len(chunk) >= size:
+            yield chunk
+            chunk = []
+    if chunk:
+        yield chunk
+
+
+def dumps_lines(trace: Trace, *,
+                columnar_events: Optional[int] = None) -> list[str]:
+    """Serialize ``trace`` to JSONL lines (no trailing newlines).
+
+    ``columnar_events=N`` writes events as schema-v5 columnar chunk records
+    of up to N events each instead of one record per event.
+    """
     lines = [json.dumps(header_dict(trace.meta))]
     lines += [json.dumps(submission_dict(s)) for s in trace.submissions]
-    lines += [json.dumps(event_dict(e)) for e in trace.events]
+    if columnar_events is None:
+        lines += [json.dumps(event_dict(e)) for e in trace.events]
+    else:
+        lines += [json.dumps(events_chunk_dict(chunk))
+                  for chunk in _event_chunks(trace.events, columnar_events)]
     lines.append(json.dumps(footer_dict(trace)))
     return lines
 
@@ -58,17 +88,28 @@ class TraceWriter:
     whole by ``write``.  ``segment_records=N``: ``path`` is a directory of
     rotating segments of at most N records each, usable either via
     ``write`` or via the streaming ``begin``/``add_*``/``end`` protocol.
+
+    ``columnar_events=N`` switches event serialization to schema-v5
+    columnar chunks of up to N events per record (lazy-decoded on read).
+    In streaming mode events are buffered until a chunk fills (or ``end``
+    flushes the remainder) — a chunk counts as one record toward segment
+    rotation.
     """
 
     def __init__(self, path: str | os.PathLike,
-                 segment_records: Optional[int] = None):
+                 segment_records: Optional[int] = None,
+                 columnar_events: Optional[int] = None):
         if segment_records is not None and segment_records < 1:
             raise ValueError("segment_records must be >= 1")
+        if columnar_events is not None and columnar_events < 1:
+            raise ValueError("columnar_events must be >= 1")
         self.path = os.fspath(path)
         self.segment_records = segment_records
+        self.columnar_events = columnar_events
         self._fh: Optional[TextIO] = None
         self._seg = 0          # next segment index
         self._in_seg = 0       # records in the open segment
+        self._chunk: list[Event] = []   # buffered events (columnar mode)
         self.records_written = 0
 
     # -- one-shot ------------------------------------------------------------
@@ -79,14 +120,14 @@ class TraceWriter:
             if parent:
                 os.makedirs(parent, exist_ok=True)
             with open(self.path, "w", encoding="utf-8") as fh:
-                for ln in dumps_lines(trace):
+                for ln in dumps_lines(trace,
+                                      columnar_events=self.columnar_events):
                     fh.write(ln + "\n")
             return self.path
         self.begin(trace.meta)
         for s in trace.submissions:
             self.add_submission(s)
-        for e in trace.events:
-            self.add_event(e)
+        self.add_events(trace.events)
         self.end(trace)
         return self.path
 
@@ -107,10 +148,26 @@ class TraceWriter:
         self._append(submission_dict(s))
 
     def add_event(self, e: Event) -> None:
-        self._append(event_dict(e))
+        if self.columnar_events is None:
+            self._append(event_dict(e))
+            return
+        self._chunk.append(e)
+        if len(self._chunk) >= self.columnar_events:
+            self._flush_chunk()
+
+    def add_events(self, events: Iterable[Event]) -> None:
+        """Append a whole event sequence (chunked when columnar)."""
+        for e in events:
+            self.add_event(e)
+
+    def _flush_chunk(self) -> None:
+        if self._chunk:
+            self._append(events_chunk_dict(self._chunk))
+            self._chunk = []
 
     def end(self, trace: Trace) -> str:
         """Write the footer (taken from ``trace``) and close the stream."""
+        self._flush_chunk()
         self._append(footer_dict(trace))
         self._fh.close()
         self._fh = None

@@ -19,7 +19,9 @@ Long-running servers can stream instead of snapshotting: pass a segmented
 ``TraceWriter`` (``segment_records=N``) as ``stream`` and the recorder
 writes the header at ``attach`` time and every submission as it happens;
 ``finish()`` then only appends the retained events and the footer — no
-whole-trace export pause.  When controllers rewire the executor
+whole-trace export pause.  A writer configured with ``columnar_events=N``
+streams those events as schema-v5 chunk records (one line per N events)
+instead of one line each.  When controllers rewire the executor
 (``repro.control.ControlLoop`` swaps the governor), attach them *before*
 the recorder so the streamed header names the effective governor.
 """
@@ -127,8 +129,7 @@ class TraceRecorder:
                       stats=ex.metrics.snapshot(), event_counts=counts,
                       events_retained=len(events))
         if self.stream is not None:
-            for e in events:
-                self.stream.add_event(e)
+            self.stream.add_events(events)
             self.stream.end(trace)
             self.stream = None
         return trace

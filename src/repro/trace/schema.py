@@ -20,6 +20,14 @@ scheduler did.  It has four record kinds, serialized one-JSON-object-per-line
   event       — one per retained ``runtime.Event`` (window semantics: the
                 ring buffer keeps the newest ``event_maxlen`` events; the
                 header's ``events_total`` counts carry whole-run totals).
+  events      — schema v5's columnar alternative to per-``event`` lines: one
+                record carries a *chunk* of consecutive events as parallel
+                column lists (``{"columns": {"step": [...], "kind": [...],
+                ...}, "n": N}``).  Readers decode chunks lazily
+                (``ColumnarEvents``), so a million-event trace parses
+                without building a million ``Event`` objects up front.
+                Writers choose per trace: per-event records (the default,
+                maximally greppable) or chunks (compact, fast).
   footer      — end-of-run ground truth: ``total_steps`` plus the full
                 ``RuntimeStats`` snapshot, the replay-fidelity oracle.
 
@@ -38,21 +46,121 @@ informational block naming how the run was observed.  Observation never
 perturbs the schedule (the obs layer's gated invariant), so v1–v3 readers
 and replays need nothing from it, and v3 traces (no ``obs``) stay readable:
 the run simply was not observed.
+Schema v5 adds the columnar ``events`` chunk record.  v1–v4 traces (only
+per-event records) stay readable unchanged; a v5 trace that sticks to
+per-event records is byte-compatible with v4 apart from the header's
+version stamp.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterable
+from bisect import bisect_right
+from collections.abc import Sequence as _SequenceABC
+from typing import Any, Iterable, Iterator, Sequence
 
 from ..runtime import Event
 
-SCHEMA_VERSION = 4
-SUPPORTED_SCHEMAS = (1, 2, 3, SCHEMA_VERSION)
+SCHEMA_VERSION = 5
+SUPPORTED_SCHEMAS = (1, 2, 3, 4, SCHEMA_VERSION)
 TRACE_KIND = "repro.runtime-trace"
+
+# serialization order of the per-event columns in an ``events`` chunk
+EVENT_COLUMNS = ("step", "kind", "worker", "domain", "task_uid",
+                 "src_domain", "cost", "penalty")
 
 
 class TraceSchemaError(ValueError):
     """Raised when a trace's schema/shape doesn't match this reader."""
+
+
+def _decode_chunk(columns: dict[str, list]) -> list[Event]:
+    """Materialize one chunk's column lists into ``Event`` objects."""
+    return [Event(step=int(s), kind=str(k), worker=int(w), domain=int(d),
+                  task_uid=int(u), src_domain=int(sd), cost=float(c),
+                  penalty=float(p))
+            for s, k, w, d, u, sd, c, p in zip(*(columns[col]
+                                                 for col in EVENT_COLUMNS))]
+
+
+class ColumnarEvents(_SequenceABC):
+    """Lazy event sequence backed by schema-v5 columnar chunks.
+
+    Holds the parsed chunk payloads (plain column lists) and decodes
+    ``Event`` objects only when iterated or indexed — ``len`` / slicing /
+    elementwise ``==`` against any event sequence all work, so consumers
+    written against ``list[Event]`` (storm detection, span assembly,
+    ``service_times``) run unchanged.  Parts may interleave chunks with
+    already-materialized event runs (a trace mixing per-event and chunk
+    records decodes in record order).
+    """
+
+    def __init__(self, parts: list[tuple[int, Any]]):
+        # parts: (n, payload) in record order; payload is a columns dict
+        # (lazy chunk) or a list[Event] (pre-materialized run)
+        self._parts = parts
+        self._offsets = [0]
+        for n, _ in parts:
+            self._offsets.append(self._offsets[-1] + n)
+
+    def __len__(self) -> int:
+        return self._offsets[-1]
+
+    def __iter__(self) -> Iterator[Event]:
+        for _, payload in self._parts:
+            if isinstance(payload, dict):
+                yield from _decode_chunk(payload)
+            else:
+                yield from payload
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return list(self)[i]
+        n = len(self)
+        if i < 0:
+            i += n
+        if not 0 <= i < n:
+            raise IndexError("ColumnarEvents index out of range")
+        part = bisect_right(self._offsets, i) - 1
+        local = i - self._offsets[part]
+        payload = self._parts[part][1]
+        if isinstance(payload, dict):
+            return Event(step=int(payload["step"][local]),
+                         kind=str(payload["kind"][local]),
+                         worker=int(payload["worker"][local]),
+                         domain=int(payload["domain"][local]),
+                         task_uid=int(payload["task_uid"][local]),
+                         src_domain=int(payload["src_domain"][local]),
+                         cost=float(payload["cost"][local]),
+                         penalty=float(payload["penalty"][local]))
+        return payload[local]
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, (list, tuple, ColumnarEvents)):
+            return NotImplemented
+        if len(other) != len(self):
+            return False
+        return all(a == b for a, b in zip(self, other))
+
+    __hash__ = None   # mutable-ish sequence semantics, like list
+
+    def __repr__(self) -> str:
+        return (f"ColumnarEvents(n={len(self)}, "
+                f"parts={len(self._parts)})")
+
+
+def events_chunk_dict(events: Sequence[Event]) -> dict[str, Any]:
+    """Serialize a run of consecutive events as one columnar chunk record."""
+    return {"record": "events", "n": len(events),
+            "columns": {
+                "step": [e.step for e in events],
+                "kind": [e.kind for e in events],
+                "worker": [e.worker for e in events],
+                "domain": [e.domain for e in events],
+                "task_uid": [e.task_uid for e in events],
+                "src_domain": [e.src_domain for e in events],
+                "cost": [e.cost for e in events],
+                "penalty": [e.penalty for e in events],
+            }}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,7 +180,9 @@ class Trace:
 
     meta: dict[str, Any]
     submissions: list[SubmissionRecord]
-    events: list[Event]
+    # list[Event] for per-event traces, ColumnarEvents for chunked (v5)
+    # ones; both are event sequences and compare elementwise
+    events: Sequence[Event]
     total_steps: int
     stats: dict[str, float]
     event_counts: dict[str, int] = dataclasses.field(default_factory=dict)
@@ -181,8 +291,16 @@ def parse_records(records: Iterable[dict[str, Any]]) -> Trace:
     """Assemble a ``Trace`` from parsed record dicts, validating schema."""
     meta: dict[str, Any] | None = None
     submissions: list[SubmissionRecord] = []
-    events: list[Event] = []
+    events: list[Event] = []          # current run of per-event records
+    parts: list[tuple[int, Any]] = []  # chunk / event-run parts, in order
     footer: dict[str, Any] = {}
+
+    def flush_events() -> None:
+        nonlocal events
+        if events:
+            parts.append((len(events), events))
+            events = []
+
     for rec in records:
         r = rec.get("record")
         if r == "header":
@@ -207,15 +325,37 @@ def parse_records(records: Iterable[dict[str, Any]]) -> Trace:
                 src_domain=int(rec.get("src_domain", -1)),
                 cost=float(rec.get("cost", 0.0)),
                 penalty=float(rec.get("penalty", 0.0))))
+        elif r == "events":
+            columns = rec.get("columns")
+            if not isinstance(columns, dict):
+                raise TraceSchemaError("events chunk has no columns dict")
+            missing = [c for c in EVENT_COLUMNS if c not in columns]
+            if missing:
+                raise TraceSchemaError(
+                    f"events chunk missing columns {missing}")
+            n = int(rec.get("n", len(columns["step"])))
+            bad = [c for c in EVENT_COLUMNS if len(columns[c]) != n]
+            if bad:
+                raise TraceSchemaError(
+                    f"events chunk declares n={n} but columns {bad} "
+                    "have a different length")
+            flush_events()
+            parts.append((n, columns))   # decoded lazily (ColumnarEvents)
         elif r == "footer":
             footer = rec
         else:
             raise TraceSchemaError(f"unknown trace record {r!r}")
     if meta is None:
         raise TraceSchemaError("trace has no header record")
-    return Trace(meta=meta, submissions=submissions, events=events,
+    all_events: Sequence[Event]
+    if parts:
+        flush_events()
+        all_events = ColumnarEvents(parts)
+    else:
+        all_events = events   # per-event-only trace: a plain list, as ever
+    return Trace(meta=meta, submissions=submissions, events=all_events,
                  total_steps=int(footer.get("total_steps", 0)),
                  stats=dict(footer.get("stats", {})),
                  event_counts=dict(footer.get("event_counts", {})),
                  events_retained=int(footer.get("events_retained",
-                                                len(events))))
+                                                len(all_events))))

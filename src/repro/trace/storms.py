@@ -25,12 +25,20 @@ windows — the terminal-friendly stand-in for the paper's variability plots.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from itertools import islice
+from typing import Iterable, Optional, Sequence
 
 from ..runtime import Event
 from .schema import event_stolen
 
 EXEC_KINDS = ("run", "steal", "inline")
+
+# streams longer than this are sampled automatically (every k-th event,
+# counts scaled by k) unless the caller pins an explicit sample_stride.
+# Default ring buffers retain at most 65536 events, so every committed
+# analysis stays exact; only deliberately huge streams (streamed segments,
+# raised event_maxlen) cross the threshold.
+AUTO_SAMPLE_THRESHOLD = 1 << 18
 
 
 class DroppedEventsError(ValueError):
@@ -93,8 +101,30 @@ class Window:
         return self.remote_steals / max(self.executed, 1)
 
 
+def _resolve_stride(events, sample_stride: Optional[int]) -> int:
+    """The effective sampling stride for a (possibly sized) event source.
+
+    An explicit ``sample_stride`` wins.  Otherwise sized sources longer
+    than ``AUTO_SAMPLE_THRESHOLD`` get the smallest stride that brings the
+    sample under the threshold (deterministic — a pure function of the
+    length); everything else stays exact (stride 1).
+    """
+    if sample_stride is not None:
+        if sample_stride < 1:
+            raise ValueError("sample_stride must be >= 1")
+        return sample_stride
+    try:
+        n = len(events)
+    except TypeError:
+        return 1
+    if n <= AUTO_SAMPLE_THRESHOLD:
+        return 1
+    return -(-n // AUTO_SAMPLE_THRESHOLD)    # ceil division
+
+
 def windows(events: Iterable[Event], width: int = 8,
-            topology=None) -> list[Window]:
+            topology=None, *,
+            sample_stride: Optional[int] = None) -> list[Window]:
     """Fold an event stream into consecutive step windows of ``width``.
 
     With a ``repro.topology.DistanceMatrix`` as ``topology``, each window
@@ -108,19 +138,35 @@ def windows(events: Iterable[Event], width: int = 8,
     its ring buffer is refused with ``DroppedEventsError`` (a holed window
     would silently mis-count); pass ``list(log)`` to analyze the retained
     window deliberately.
+
+    Sampling at large n: folding is per-event, so million-event streams
+    (streamed segment traces, raised ``event_maxlen``) would pay a Python
+    loop per event.  When the source's length exceeds
+    ``AUTO_SAMPLE_THRESHOLD`` (or ``sample_stride=k`` is passed
+    explicitly), only every k-th event is folded and each counted
+    contribution is weighted by k — window counts become deterministic
+    stride-k *estimates* (fractions unbiased, small windows noisier), and
+    windows with no sampled events disappear.  ``sample_stride=1`` pins
+    the analysis exact regardless of size.  Default-sized ring buffers
+    (65536) never auto-sample.
     """
     if width < 1:
         raise ValueError("window width must be >= 1")
+    evs = _checked_events(events)
+    stride = _resolve_stride(evs, sample_stride)
+    source: Iterable[Event] = evs
+    if stride > 1:
+        source = islice(iter(evs), 0, None, stride)
     acc: dict[int, dict[str, int]] = {}
-    for e in _checked_events(events):
+    for e in source:
         w = acc.setdefault(e.step // width,
                            {"run": 0, "steal": 0, "inline": 0,
                             "idle": 0, "submit": 0, "remote": 0})
         if e.kind in w:
-            w[e.kind] += 1
+            w[e.kind] += stride
         if (topology is not None and event_stolen(e)
                 and topology.level(e.src_domain, e.domain) >= 2):
-            w["remote"] += 1
+            w["remote"] += stride
     return [Window(start=k * width, width=width, runs=v["run"],
                    steals=v["steal"], inlines=v["inline"], idles=v["idle"],
                    submits=v["submit"], remote_steals=v["remote"])
@@ -128,31 +174,36 @@ def windows(events: Iterable[Event], width: int = 8,
 
 
 def detect_steal_storms(events: Iterable[Event], width: int = 8,
-                        frac: float = 0.5, min_executed: int = 4) -> list[Window]:
+                        frac: float = 0.5, min_executed: int = 4, *,
+                        sample_stride: Optional[int] = None) -> list[Window]:
     """Windows where at least ``frac`` of executed tasks were steals (and
-    enough ran for the fraction to mean anything)."""
-    return [w for w in windows(events, width)
+    enough ran for the fraction to mean anything).  ``sample_stride``
+    forwards to ``windows`` (sampled estimates at large n)."""
+    return [w for w in windows(events, width, sample_stride=sample_stride)
             if w.executed >= min_executed and w.steal_fraction >= frac]
 
 
 def detect_remote_storms(events: Iterable[Event], topology, width: int = 8,
                          frac: float = 0.25,
-                         min_executed: int = 4) -> list[Window]:
+                         min_executed: int = 4, *,
+                         sample_stride: Optional[int] = None) -> list[Window]:
     """Windows where cross-tier (topology level >= 2) steals make up at
     least ``frac`` of executed tasks: work is leaving its socket/pod in
     bulk, each migration paying the scaled deep-link penalty.  The evidence
     bar defaults *lower* than ``detect_steal_storms`` — remote steals cost
     more apiece, so fewer justify flagging — matching the online
     ``control.StormBreaker(remote_frac=...)`` detector."""
-    return [w for w in windows(events, width, topology=topology)
+    return [w for w in windows(events, width, topology=topology,
+                               sample_stride=sample_stride)
             if w.executed >= min_executed and w.remote_fraction >= frac]
 
 
 def detect_inline_bursts(events: Iterable[Event], width: int = 8,
-                         frac: float = 0.25, min_executed: int = 4) -> list[Window]:
+                         frac: float = 0.25, min_executed: int = 4, *,
+                         sample_stride: Optional[int] = None) -> list[Window]:
     """Windows where backpressure made the submitter do ≥ ``frac`` of the
     executing — the pool-saturated regime."""
-    return [w for w in windows(events, width)
+    return [w for w in windows(events, width, sample_stride=sample_stride)
             if w.executed >= min_executed and w.inline_fraction >= frac]
 
 

@@ -379,7 +379,7 @@ class TestSchemaV4:
         built, t = _recorded()
         lines = trace.dumps_lines(t)
         head = json.loads(lines[0])
-        assert head["schema"] == 4
+        assert head["schema"] == 5
         assert head["obs"] == built.spec.obs.to_dict()
         t2 = trace.loads_lines(lines)
         assert t2.obs_dict == built.spec.obs.to_dict()

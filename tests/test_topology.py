@@ -353,7 +353,7 @@ class TestTraceBackCompat:
         t = self._hier_run()
         lines = trace.dumps_lines(t)
         head = json.loads(lines[0])
-        assert head["schema"] == 4
+        assert head["schema"] == 5
         head["schema"] = 2
         head.pop("topology")
         # drop the spec's topology and obs blocks too: a real v2 writer
@@ -382,7 +382,7 @@ class TestTraceBackCompat:
         t = self._hier_run()
         lines = trace.dumps_lines(t)
         head = json.loads(lines[0])
-        head["schema"] = 5
+        head["schema"] = 6
         with pytest.raises(trace.TraceSchemaError, match="schema"):
             trace.loads_lines([json.dumps(head)] + lines[1:])
 

@@ -473,11 +473,84 @@ class TestSchemaV2SpecHeaders:
         # replays the schedule but cannot match the penalty account.
         assert not trace.replay(t).matches_recorded
 
-    def test_written_traces_are_v4(self, tmp_path):
+    def test_written_traces_are_v5(self, tmp_path):
         _, t = self._spec_run()
-        path = tmp_path / "v4.jsonl"
+        path = tmp_path / "v5.jsonl"
         trace.TraceWriter(path).write(t)
         import json
         head = json.loads(open(path).readline())
-        assert head["schema"] == trace.SCHEMA_VERSION == 4
+        assert head["schema"] == trace.SCHEMA_VERSION == 5
         assert head["spec"]["spec_version"] == 1
+
+
+class TestColumnarEventChunks:
+    def test_dumps_lines_columnar_round_trip(self):
+        t, _ = _recorded_run()
+        lines = trace.dumps_lines(t, columnar_events=7)
+        t2 = trace.loads_lines(lines)
+        assert isinstance(t2.events, trace.ColumnarEvents)
+        assert len(t2.events) == len(t.events)
+        assert t2.events == list(t.events)       # elementwise, lazy decode
+        assert t2.submissions == t.submissions
+        assert t2.stats == t.stats
+        # far fewer event lines than events: ceil(n/7) chunk records
+        n_chunks = sum(1 for ln in lines if '"record": "events"' in ln)
+        assert n_chunks == -(-len(t.events) // 7)
+
+    def test_columnar_events_sequence_semantics(self):
+        t, _ = _recorded_run()
+        t2 = trace.loads_lines(trace.dumps_lines(t, columnar_events=5))
+        ev = t2.events
+        assert ev[0] == t.events[0] and ev[-1] == t.events[-1]
+        assert ev[2:5] == list(t.events)[2:5]
+        with pytest.raises(IndexError):
+            ev[len(ev)]
+        # consumers written against list[Event] run unchanged
+        assert t2.service_times() == t.service_times()
+
+    def test_columnar_file_and_replay_round_trip(self, tmp_path):
+        t, _ = _recorded_run()
+        path = tmp_path / "run.columnar.jsonl"
+        trace.TraceWriter(path, columnar_events=16).write(t)
+        t2 = trace.TraceReader(path).read()
+        assert t2.events == list(t.events)
+        factory = lambda tr: trace.executor_from_meta(  # noqa: E731
+            tr, steal_penalty=_penalty)
+        rep = trace.replay(t2, factory)
+        assert rep.matches_recorded, rep.mismatches()
+
+    def test_streaming_segments_chunk_at_boundaries(self, tmp_path):
+        t, _ = _recorded_run()
+        d = tmp_path / "segs"
+        w = trace.TraceWriter(d, segment_records=32, columnar_events=8)
+        w.begin(t.meta)
+        for s in t.submissions:
+            w.add_submission(s)
+        w.add_events(t.events)
+        w.end(t)
+        t2 = trace.TraceReader(d).read()
+        assert t2.events == list(t.events)
+        assert t2.submissions == t.submissions and t2.stats == t.stats
+
+    def test_malformed_chunks_rejected(self):
+        t, _ = _recorded_run()
+        lines = trace.dumps_lines(t, columnar_events=4)
+        import json
+        chunk_at = next(i for i, ln in enumerate(lines)
+                        if '"record": "events"' in ln)
+        rec = json.loads(lines[chunk_at])
+        missing = dict(rec)
+        missing["columns"] = {k: v for k, v in rec["columns"].items()
+                              if k != "cost"}
+        ragged = json.loads(lines[chunk_at])
+        ragged["columns"]["step"] = ragged["columns"]["step"][:-1]
+        for bad in (missing, ragged):
+            mutated = list(lines)
+            mutated[chunk_at] = json.dumps(bad)
+            with pytest.raises(trace.TraceSchemaError):
+                trace.loads_lines(mutated)
+
+    def test_degenerate_chunk_sizes_rejected(self, tmp_path):
+        t, _ = _recorded_run()
+        with pytest.raises(ValueError):
+            trace.TraceWriter(tmp_path / "x.jsonl", columnar_events=0)
